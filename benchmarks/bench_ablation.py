@@ -1,0 +1,33 @@
+"""Paper Table 5: 2-D ablation over lookahead size × trainable modules.
+
+Axes: n_lookahead ∈ {4, 8, 16, 32} × modules ∈ {emb-only, qv, all}.
+Metric: recall@k of predicted vs GT scores after a short training run, plus
+the eviction-time overhead (extra forward rows, analytic %).
+Expected (paper): both axes help; saturation in lookahead size; "all" LoRA
+placement is worth a small latency premium.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (N_IN, eval_batch, recall_at_k, trained_model)
+from repro.core import objective
+
+SIZES = (4, 8, 16)
+MODES = ("emb-only", "qv", "all")
+
+
+def run(report):
+    for mode in MODES:
+        for n_look in SIZES:
+            cfg, params, lkv, final_loss = trained_model(
+                n_lookahead=n_look, lora_mode=mode, steps=80)
+            b, x, xy = eval_batch(cfg)
+            s_gt = objective.gt_scores(params, cfg, xy, x.shape[1])
+            s_pred = objective.lookahead_scores(params, cfg, lkv, x)
+            r = recall_at_k(s_pred, s_gt, k=16)
+            overhead = 100.0 * n_look / N_IN  # extra prefill rows
+            report(f"ablation/{mode}/n{n_look}", None,
+                   f"recall@16={r:.3f} kl={final_loss:.4f} "
+                   f"overhead~{overhead:.1f}%")

@@ -1,0 +1,85 @@
+"""Paper Fig. 4 / Tables 9–14 (proxy): eviction quality across methods ×
+budgets.
+
+Without pretrained weights, absolute LongBench scores are not reproducible;
+the *orderings* the paper claims are.  Two measures per (method, budget):
+
+  gt_overlap — mean per-head overlap of the kept set with the GT-oracle
+               kept set (the quantity eviction is optimizing);
+  needle_acc — teacher-forced needle retention: fraction of needle-value
+               positions that survive eviction (end-task proxy).
+
+Expected ordering (paper): lookaheadkv > {laq} > snapkv/pyramidkv >
+streaming_llm ≈ random, gaps widening at small budgets.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_batch, trained_model
+from repro.common.config import EvictionConfig
+from repro.core import policies
+from repro.data import synthetic
+from repro.models import transformer as tf
+
+METHODS = ("random", "streaming_llm", "snapkv", "pyramidkv", "tova",
+           "laq", "lookaheadkv")
+BUDGETS = (8, 16, 32, 64)
+
+
+def _kept_sets(cache):
+    pos = np.asarray(cache["attn"]["pos"])
+    mask = np.asarray(cache["attn"]["mask"])
+    L, B, C, KV = pos.shape
+    out = {}
+    for l in range(L):
+        for b in range(B):
+            for h in range(KV):
+                out[(l, b, h)] = set(pos[l, b, mask[l, b, :, h], h].tolist())
+    return out
+
+
+def _overlap(a: dict, g: dict) -> float:
+    return float(np.mean([
+        len(a[k] & g[k]) / max(len(g[k]), 1) for k in g
+    ]))
+
+
+def _needle_survival(cache, answer_pos) -> float:
+    pos = np.asarray(cache["attn"]["pos"])
+    mask = np.asarray(cache["attn"]["mask"])
+    L, B, C, KV = pos.shape
+    surv = []
+    for b in range(B):
+        want = set(answer_pos[b].tolist())
+        for l in range(L):
+            for h in range(KV):
+                kept = set(pos[l, b, mask[l, b, :, h], h].tolist())
+                surv.append(len(want & kept) / len(want))
+    return float(np.mean(surv))
+
+
+def run(report):
+    cfg, params, lkv, _ = trained_model()
+    b, x, xy = eval_batch(cfg)
+    rng = np.random.default_rng(5)
+    nb = synthetic.make_needle_batch(rng, 4, 96, cfg.vocab_size)
+    nx = jnp.asarray(nb.x)
+    nxy = jnp.concatenate([nx, jnp.asarray(nb.y)], axis=1)
+
+    for budget in BUDGETS:
+        ev = EvictionConfig(budget=budget, draft_len=8)
+        gt = tf.prefill(params, cfg, xy, policy="gt_oracle",
+                        gt_boundary=x.shape[1], evict=ev)
+        gt_sets = _kept_sets(gt.cache)
+        for m in METHODS:
+            res = policies.run_eviction(m, params, cfg, x, evict=ev,
+                                        lkv_params=lkv)
+            ov = _overlap(_kept_sets(res.cache), gt_sets)
+            nres = policies.run_eviction(m, params, cfg, nx, evict=ev,
+                                         lkv_params=lkv)
+            acc = _needle_survival(nres.cache, nb.answer_pos)
+            report(f"accuracy/{m}/b{budget}", None,
+                   f"gt_overlap={ov:.3f} needle_survival={acc:.3f}")

@@ -1,0 +1,47 @@
+"""Paper Fig. 4 (bottom) / Fig. 6 (RULER proxy): fixed budget, growing
+context.  Needle-survival per method as the prompt grows — the paper's claim
+is that LookaheadKV trained at short context generalizes to longer ones."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_model
+from repro.common.config import EvictionConfig
+from repro.core import policies
+from repro.data import synthetic
+
+CONTEXTS = (64, 128, 256)
+BUDGET = 16
+METHODS = ("random", "streaming_llm", "snapkv", "lookaheadkv")
+
+
+def _survival(cache, answer_pos):
+    pos = np.asarray(cache["attn"]["pos"])
+    mask = np.asarray(cache["attn"]["mask"])
+    L, B, C, KV = pos.shape
+    out = []
+    for b in range(B):
+        want = set(answer_pos[b].tolist())
+        for l in range(L):
+            for h in range(KV):
+                kept = set(pos[l, b, mask[l, b, :, h], h].tolist())
+                out.append(len(want & kept) / len(want))
+    return float(np.mean(out))
+
+
+def run(report):
+    # trained at N_IN=96 — evaluated beyond its training context (paper §5.4)
+    cfg, params, lkv, _ = trained_model()
+    ev = EvictionConfig(budget=BUDGET, draft_len=8)
+    rng = np.random.default_rng(3)
+    for ctx in CONTEXTS:
+        nb = synthetic.make_needle_batch(rng, 4, ctx, cfg.vocab_size)
+        x = jnp.asarray(nb.x)
+        for m in METHODS:
+            res = policies.run_eviction(m, params, cfg, x, evict=ev,
+                                        lkv_params=lkv)
+            s = _survival(res.cache, nb.answer_pos)
+            report(f"context_scaling/{m}/ctx{ctx}", None,
+                   f"needle_survival={s:.3f} (budget={BUDGET})")

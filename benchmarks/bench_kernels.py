@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: wall-time of the jnp fallbacks on CPU (ordering/
+regression tracking) + analytic VMEM working-set check of the Pallas tilings
+(the quantity that must stay under ~16 MB on v5e)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ops
+
+
+def _vmem_bytes_flash(block_q, block_k, hd):
+    # q tile + k tile + v tile + f32 accumulators
+    return (block_q * hd * 2 + 2 * block_k * hd * 2
+            + block_q * (hd + 2) * 4)
+
+
+def _vmem_bytes_lookahead(n_obs, block_k, hd):
+    return n_obs * hd * 2 + block_k * hd * 2 + 2 * n_obs * 4 + block_k * 4
+
+
+def _vmem_bytes_ssd(chunk, bh, hd, ds):
+    return (chunk * bh * (hd + 2) * 4 + 2 * chunk * ds * 4
+            + bh * hd * ds * 4 + chunk * chunk * (bh + 1) * 4)
+
+
+def run(report):
+    for (bq, bk, hd) in ((128, 128, 128), (256, 512, 128), (128, 1024, 256)):
+        vm = _vmem_bytes_flash(bq, bk, hd)
+        report(f"kernels/flash_vmem/bq{bq}_bk{bk}_hd{hd}", None,
+               f"vmem_kb={vm/1024:.0f} fits_16MB={vm < 16e6}")
+    for (no, bk, hd) in ((32, 512, 128), (32, 2048, 128), (128, 1024, 256)):
+        vm = _vmem_bytes_lookahead(no, bk, hd)
+        report(f"kernels/lookahead_vmem/obs{no}_bk{bk}", None,
+               f"vmem_kb={vm/1024:.0f} fits_16MB={vm < 16e6}")
+    for (ck, bh, hd, ds) in ((128, 8, 64, 128), (128, 8, 64, 16)):
+        vm = _vmem_bytes_ssd(ck, bh, hd, ds)
+        report(f"kernels/ssd_vmem/chunk{ck}_bh{bh}_ds{ds}", None,
+               f"vmem_kb={vm/1024:.0f} fits_16MB={vm < 16e6}")
+
+    # CPU wall-time of the fallbacks (regression tracking)
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 1, 4096, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True))
+    report("kernels/flash_fallback_4k", time_call(fa, q, k, v),
+           "B1 S4096 H4 hd64 f32")
+    qo = q[:, :32]
+    ls = jax.jit(lambda qo, k: ops.lookahead_score(qo, k, S - 32))
+    report("kernels/lookahead_fallback_4k", time_call(ls, qo, k),
+           "n_obs=32 S4096")
+    qd = q[:, 0, :, :]
+    da = jax.jit(lambda qd, k, v: ops.decode_attention(qd, k, v))
+    report("kernels/decode_fallback_4k", time_call(da, qd, k, v), "S4096")
+    nh, ds = 8, 64
+    x = jax.random.normal(ks[0], (B, 1024, nh, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, 1024, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[0], (B, 1024, 1, ds))
+    Cm = jax.random.normal(ks[1], (B, 1024, 1, ds))
+    sc = jax.jit(lambda *a: ops.ssd_scan(*a, chunk=128))
+    report("kernels/ssd_fallback_1k", time_call(sc, x, dt, A, Bm, Cm),
+           "S1024 nh8 ds64")

@@ -1,0 +1,143 @@
+"""Paper Table 3 / 15 + Fig. 3: theoretical + empirical TTFT cost analysis.
+
+Theoretical: the Davies et al. (2025)-style analytical model the paper uses
+(§B): per phase, latency = max(FLOPs / (peak·eff_f), bytes / (bw·eff_m)),
+H100 constants, eff_f = 0.7, eff_m = 0.9, batch 1, half precision, C = 128,
+lookahead/window/draft = 32.  Reproduces the paper's structure exactly for
+LLaMA3.1-8B at 4K–32K and derives the headline "LAQ overhead / LKV overhead"
+ratio (paper: up to 14.5×).
+
+Empirical: wall-clock prefill+evict on the CPU smoke model (ordering only —
+CPU microseconds are not H100 milliseconds).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call, trained_model
+from repro.common.config import EvictionConfig
+from repro.configs import get_config
+from repro.core import policies
+
+# H100 SXM, half precision (paper §B)
+PEAK = 989e12
+BW = 3.35e12
+EFF_F, EFF_M = 0.7, 0.9
+
+BUDGET = 128
+N_LOOK = 32
+DRAFT = 32
+
+
+def _phase(flops, bytes_):
+    return max(flops / (PEAK * EFF_F), bytes_ / (BW * EFF_M))
+
+
+def _model_stats(cfg):
+    n = cfg.num_params()
+    a = cfg.attn
+    kv_per_tok = cfg.num_layers * a.kv_dim * 2 * 2  # K+V bf16 bytes
+    return n, kv_per_tok
+
+
+def theoretical_ttft(cfg, ctx: int, method: str, draft_cfg=None) -> dict:
+    """Returns {compute_tflops, mem_gb, ttft_ms, overhead_ms}."""
+    n, kv_tok = _model_stats(cfg)
+    w_bytes = 2 * n
+
+    def prefill(tokens, model_n=n, model_w=w_bytes, model_kv=kv_tok):
+        fl = 2 * model_n * tokens
+        # + attention quadratic term
+        a = cfg.attn
+        fl += 4 * tokens * tokens * a.q_dim * cfg.num_layers / 2
+        by = model_w + tokens * model_kv
+        return fl, by
+
+    def decode_steps(steps, cache_tokens, model_n=n, model_w=w_bytes,
+                     model_kv=kv_tok):
+        fl = steps * 2 * model_n
+        by = steps * (model_w + cache_tokens * model_kv)
+        return fl, by
+
+    base_f, base_b = prefill(ctx)
+    t_base = _phase(base_f, base_b)
+
+    if method == "forward":
+        f, b = base_f, base_b
+        t = t_base
+    elif method == "snapkv":
+        # reuses prefill attention; score pass over window×ctx is ~free
+        f = base_f + 2 * 32 * ctx * cfg.attn.q_dim * cfg.num_layers
+        b = base_b + ctx * kv_tok / 1024  # score reads are tiny
+        t = _phase(f, b)
+    elif method == "lookaheadkv":
+        # 32 extra rows through the model (+LoRA ~0.5%) + fused score kernel
+        ext_f = 2 * n * N_LOOK * 1.005
+        score_f = 2 * N_LOOK * ctx * cfg.attn.q_dim * cfg.num_layers
+        f = base_f + ext_f + score_f
+        b = base_b + ctx * kv_tok  # score kernel streams K once
+        t = _phase(f, b)
+    elif method == "speckv":
+        dn, dkv = _model_stats(draft_cfg)
+        dpre_f, dpre_b = prefill(ctx, dn, 2 * dn, dkv)
+        ddec_f, ddec_b = decode_steps(DRAFT, ctx, dn, 2 * dn, dkv)
+        scr_f = 2 * DRAFT * ctx * cfg.attn.q_dim * cfg.num_layers \
+            + 2 * n * DRAFT
+        f = base_f + dpre_f + ddec_f + scr_f
+        b = base_b + dpre_b + ddec_b + ctx * kv_tok
+        t = t_base + _phase(dpre_f, dpre_b) + _phase(ddec_f, ddec_b) \
+            + _phase(scr_f, ctx * kv_tok)
+    elif method == "laq":
+        # phase 2: 32 decode steps re-reading ALL weights each step — the
+        # paper's 445 GB memory-traffic column
+        ddec_f, ddec_b = decode_steps(DRAFT, BUDGET)
+        scr_f = 2 * DRAFT * ctx * cfg.attn.q_dim * cfg.num_layers
+        scr_b = ctx * kv_tok  # re-read full prompt KV
+        f = base_f + ddec_f + scr_f
+        b = base_b + ddec_b + scr_b
+        t = t_base + _phase(ddec_f, ddec_b) + _phase(scr_f, scr_b)
+    else:
+        raise ValueError(method)
+    return {
+        "tflops": f / 1e12,
+        "mem_gb": b / 1e9,
+        "ttft_ms": t * 1e3,
+        "overhead_ms": (t - t_base) * 1e3,
+    }
+
+
+def run(report):
+    cfg = get_config("llama3-8b")
+    draft = get_config("tiny-llama")
+    headline = {}
+    for ctx in (4096, 8192, 16384, 32768):
+        for m in ("forward", "lookaheadkv", "snapkv", "speckv", "laq"):
+            r = theoretical_ttft(cfg, ctx, m, draft_cfg=draft)
+            report(
+                f"ttft_theory/{m}/ctx{ctx}", None,
+                f"tflops={r['tflops']:.0f} mem_gb={r['mem_gb']:.0f} "
+                f"ttft_ms={r['ttft_ms']:.1f} overhead_ms={r['overhead_ms']:.2f}",
+            )
+            headline[(m, ctx)] = r["overhead_ms"]
+    ratio = headline[("laq", 32768)] / max(headline[("lookaheadkv", 32768)],
+                                           1e-9)
+    pct = 100 * headline[("lookaheadkv", 32768)] / (
+        theoretical_ttft(cfg, 32768, "forward")["ttft_ms"])
+    report("ttft_theory/headline", None,
+           f"LAQ/LKV theoretical overhead ratio @32K = {ratio:.0f}x "
+           f"(paper Table 3 theoretical: 239.26/1.74 = 137x; the quoted "
+           f"14.5x is the paper's *empirical* 553.68/38.04); "
+           f"LKV overhead = {pct:.2f}% of TTFT (paper: <=2.16%)")
+
+    # empirical (CPU smoke model; ordering only)
+    scfg, params, lkv, _ = trained_model()
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (1, 96), 0,
+                                scfg.vocab_size)
+    ev = EvictionConfig(budget=16, draft_len=8)
+    for m in ("snapkv", "lookaheadkv", "laq"):
+        fn = jax.jit(lambda t, m=m: policies.run_eviction(
+            m, params, scfg, t, evict=ev, lkv_params=lkv).logits)
+        us = time_call(fn, tokens)
+        report(f"ttft_empirical_cpu/{m}", us, "prefill+evict wall (smoke)")

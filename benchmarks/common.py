@@ -1,0 +1,112 @@
+"""Shared benchmark scaffolding: a small trained model cached across
+benchmark modules (training once keeps `python -m benchmarks.run` tractable
+on the 1-core CPU container), timing helpers, and metric utilities
+(recall@k, Kendall's τ — the paper's Table 8 metrics)."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import EvictionConfig, TrainConfig
+from repro.configs import get_smoke_config
+from repro.core import objective
+from repro.core.lookahead import init_lookahead_params
+from repro.data import synthetic
+from repro.models import transformer as tf
+from repro.optim import adam
+
+N_IN, N_OUT = 96, 16
+BATCH = 4
+
+
+@functools.lru_cache(maxsize=4)
+def trained_model(arch: str = "smollm-135m", steps: int = 120,
+                  n_lookahead: int | None = None, lora_mode: str = "all",
+                  seed: int = 0):
+    """(cfg, params, lkv) with lookahead modules trained on the synthetic
+    mixture.  lora_mode: all | qv | emb-only (Table 5 ablation axes)."""
+    import dataclasses
+
+    cfg = get_smoke_config(arch)
+    lk = cfg.lookahead
+    if n_lookahead is not None or lora_mode != "all":
+        targets = lk.lora_targets
+        if lora_mode == "qv":
+            targets = ("wq", "wv")
+        elif lora_mode == "emb-only":
+            targets = ()
+        lk = dataclasses.replace(
+            lk, n_lookahead=n_lookahead or lk.n_lookahead,
+            lora_targets=targets)
+        cfg = dataclasses.replace(cfg, lookahead=lk)
+    key = jax.random.PRNGKey(seed)
+    params = tf.init_params(key, cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(seed + 1), cfg,
+                                params["layers"])
+    tc = TrainConfig(steps=steps, lr=1e-3, warmup_frac=0.05)
+    it = synthetic.MixtureIterator(cfg, BATCH, N_IN, N_OUT, seed=seed)
+
+    @jax.jit
+    def step(lkv, opt, x, xy):
+        def loss_fn(l):
+            return objective.lkv_loss(params, cfg, l, x, xy, x.shape[1])[0]
+
+        loss, grads = jax.value_and_grad(loss_fn)(lkv)
+        lkv, opt, _ = adam.update(lkv, grads, opt, tc)
+        return lkv, opt, loss
+
+    opt = adam.init(lkv)
+    for _ in range(steps):
+        b = next(it)
+        x = jnp.asarray(b.x)
+        xy = jnp.concatenate([x, jnp.asarray(b.y)], axis=1)
+        lkv, opt, loss = step(lkv, opt, x, xy)
+    return cfg, params, lkv, float(loss)
+
+
+def recall_at_k(s_pred, s_gt, k: int) -> float:
+    _, tp = jax.lax.top_k(s_pred, k)
+    _, tg = jax.lax.top_k(s_gt, k)
+    hits = (tp[..., :, None] == tg[..., None, :]).any(-1).sum(-1)
+    return float(jnp.mean(hits / k))
+
+
+def kendall_tau(s_pred, s_gt, samples: int = 2000, seed: int = 0) -> float:
+    """Sampled Kendall rank correlation over the key axis."""
+    rng = np.random.default_rng(seed)
+    p = np.asarray(s_pred, np.float64).reshape(-1, s_pred.shape[-1])
+    g = np.asarray(s_gt, np.float64).reshape(-1, s_gt.shape[-1])
+    n = p.shape[-1]
+    i = rng.integers(0, n, samples)
+    j = rng.integers(0, n, samples)
+    ok = i != j
+    i, j = i[ok], j[ok]
+    sp = np.sign(p[:, i] - p[:, j])
+    sg = np.sign(g[:, i] - g[:, j])
+    return float((sp * sg).mean())
+
+
+def time_call(fn, *args, iters: int = 3, **kw) -> float:
+    """Median wall-time (µs) of a jitted call (post-warmup)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def eval_batch(cfg, seed: int = 1234, batch: int = BATCH):
+    it = synthetic.MixtureIterator(cfg, batch, N_IN, N_OUT, seed=seed)
+    b = next(it)
+    x = jnp.asarray(b.x)
+    xy = jnp.concatenate([x, jnp.asarray(b.y)], axis=1)
+    return b, x, xy

@@ -1,0 +1,87 @@
+"""Flat-npz pytree checkpointing (orbax is not available offline).
+
+Pytrees are flattened to ``path -> array`` with '/'-joined dict keys; dtypes
+(including bfloat16, stored as uint16 views) and the tree structure round-trip
+exactly.  Sharded arrays are gathered to host before saving (process-0
+semantics on a real cluster; a no-op single-process here).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save(path: str, tree: Any, *, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        if a.dtype == jnp.bfloat16:
+            dtypes[k] = "bfloat16"
+            a = a.view(np.uint16)
+        else:
+            dtypes[k] = str(a.dtype)
+        arrays[k.replace("/", "__")] = a
+    arrays["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8
+    )
+    if metadata:
+        arrays["__meta__"] = np.frombuffer(
+            json.dumps(metadata).encode(), dtype=np.uint8
+        )
+    np.savez(path, **arrays)
+
+
+def load(path: str, like: Any | None = None) -> Any:
+    """Restore.  With ``like`` given, unflatten into its structure (and
+    validate shapes); otherwise return the flat {path: array} dict."""
+    z = np.load(path)
+    dtypes = json.loads(bytes(z["__dtypes__"]).decode())
+    flat = {}
+    for k in z.files:
+        if k.startswith("__"):
+            continue
+        path_key = k.replace("__", "/")
+        a = z[k]
+        if dtypes[path_key] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        flat[path_key] = jnp.asarray(a)
+    if like is None:
+        return flat
+    ref = _flatten(like)
+    assert set(ref) == set(flat), (
+        f"checkpoint/tree mismatch: {set(ref) ^ set(flat)}"
+    )
+    for k in ref:
+        assert ref[k].shape == flat[k].shape, (k, ref[k].shape, flat[k].shape)
+    leaves, treedef = jax.tree.flatten(like)
+    ordered = [flat[k] for k in sorted(ref)]
+    # tree.flatten of nested dicts is sorted-key order — same as _flatten
+    return jax.tree.unflatten(treedef, ordered)
+
+
+def metadata(path: str) -> dict:
+    z = np.load(path)
+    if "__meta__" in z.files:
+        return json.loads(bytes(z["__meta__"]).decode())
+    return {}

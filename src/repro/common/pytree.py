@@ -1,0 +1,68 @@
+"""Small pytree utilities: parameter counting, dtype casting, tree maps with
+path filters.  We hand-roll these because flax/optax are not available in the
+offline container (DESIGN.md §2)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree: Any, dtype=None) -> Any:
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_map_with_path(fn: Callable, tree: Any) -> Any:
+    """fn(path_str, leaf) -> new leaf.  path_str like 'layers/attn/wq'."""
+
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def check_finite(tree: Any) -> jnp.ndarray:
+    """True iff every leaf is finite everywhere."""
+    oks = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    return jnp.stack(oks).all() if oks else jnp.asarray(True)

@@ -1,0 +1,90 @@
+"""Lookahead parameters: learnable lookahead tokens + selective LoRA tree.
+
+The LoRA tree *mirrors the model parameter tree*: for every stacked linear
+weight ``(L, d_in, d_out)`` whose leaf name is in ``cfg.lookahead.lora_targets``
+we create ``{"a": (L, d_in, r) f32, "b": (L, r, d_out) f32}``.  Mirroring
+means the per-layer LoRA slice can ride the same ``lax.scan`` xs as the layer
+params, and module code can look adapters up by the weight's own name.
+
+Routed-expert weights are (L, E, d, f) — 4-D — and are therefore naturally
+excluded (the paper only adapts dense linears; for MoE archs the config
+restricts targets to attention + shared experts anyway).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import lora_init
+
+
+def lora_scale(cfg: ModelConfig) -> float:
+    lk = cfg.lookahead
+    return lk.lora_alpha / lk.lora_rank
+
+
+def init_lookahead_params(key, cfg: ModelConfig, layer_params: dict) -> dict:
+    """Build {"emb": (n_lookahead, D), "lora": mirrored tree}.
+
+    ``layer_params`` is the model's *stacked* per-layer tree (leaves have a
+    leading L axis).
+    """
+    lk = cfg.lookahead
+    k_emb, k_lora = jax.random.split(key)
+    emb = jax.random.normal(
+        k_emb, (lk.n_lookahead, cfg.d_model), jnp.float32
+    ) * 0.02
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(layer_params)[0]
+    keys = jax.random.split(k_lora, max(len(leaves_with_paths), 1))
+
+    def build(path, leaf, k):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        if name in lk.lora_targets and leaf.ndim == 3:
+            L, d_in, d_out = leaf.shape
+            ks = jax.random.split(k, L)
+            return jax.vmap(
+                lambda kk: lora_init(kk, d_in, d_out, lk.lora_rank)
+            )(ks)
+        return None
+
+    lora_tree: Any = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(layer_params),
+        [build(p, l, k) for (p, l), k in zip(leaves_with_paths, keys)],
+    )
+    lora_tree = _prune_none(lora_tree)
+    return {"emb": emb, "lora": lora_tree}
+
+
+def _prune_none(tree):
+    if isinstance(tree, dict):
+        out = {k: _prune_none(v) for k, v in tree.items()}
+        return {k: v for k, v in out.items() if v is not None} or None
+    return tree
+
+
+def lookahead_count(lkv_params: dict) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(lkv_params))
+
+
+def append_lookahead(
+    h: jnp.ndarray,  # (B, S, D) embedded prompt
+    lkv_params: dict,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Concat the learned lookahead rows; returns (h', lookahead_mask (B,S',1))."""
+    B, S, D = h.shape
+    emb = lkv_params["emb"].astype(h.dtype)  # (n, D)
+    n = emb.shape[0]
+    h2 = jnp.concatenate([h, jnp.broadcast_to(emb[None], (B, n, D))], axis=1)
+    mask = jnp.concatenate(
+        [jnp.zeros((B, S, 1), h.dtype), jnp.ones((B, n, 1), h.dtype)], axis=1
+    )
+    return h2, mask

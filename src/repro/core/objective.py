@@ -1,0 +1,109 @@
+"""LookaheadKV training objective (paper §3.2, Algorithm 1).
+
+One training iteration:
+  1. GT pass      — frozen model over [X; Y]; per-(layer, head) importance
+                    scores of X's keys from Y's queries (stop-gradient).
+  2. Lookahead pass — frozen model + lookahead tokens + selective LoRA over
+                    [X; P]; the same scores from P's queries.
+  3. Loss         — mean over L·H of KL(ŝ_GT ‖ ŝ_LKV) with L1-normalized
+                    score vectors (≡ ListNet ranking loss with identity φ).
+
+Only ``lkv_params`` receive gradients; the model tree is a closure constant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.core.scoring import normalize_l1
+from repro.models import transformer as tf
+
+
+def kl_divergence(p: jnp.ndarray, q: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """KL(p ‖ q) along the last axis; p, q L1-normalized score vectors."""
+    p = jnp.maximum(p, 0.0)
+    q = jnp.maximum(q, eps)
+    return jnp.sum(jnp.where(p > 0, p * (jnp.log(p + eps) - jnp.log(q)), 0.0),
+                   axis=-1)
+
+
+def gt_scores(
+    params: dict,
+    cfg: ModelConfig,
+    xy_tokens: jnp.ndarray,  # (B, n_in + n_out)
+    n_in: int,
+    *,
+    encoder_embeds: Optional[jnp.ndarray] = None,
+    mrope_positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Ground-truth per-head scores (L, B, H, n_in), f32, stop-gradient."""
+    res = tf.prefill(
+        params, cfg, xy_tokens, capture_scores=True, gt_boundary=n_in,
+        want_logits="none", encoder_embeds=encoder_embeds,
+        mrope_positions=mrope_positions,
+    )
+    return jax.lax.stop_gradient(res.scores)
+
+
+def lookahead_scores(
+    params: dict,
+    cfg: ModelConfig,
+    lkv_params: dict,
+    x_tokens: jnp.ndarray,  # (B, n_in)
+    *,
+    encoder_embeds: Optional[jnp.ndarray] = None,
+    mrope_positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Lookahead-estimated per-head scores (L, B, H, n_in), differentiable
+    w.r.t. ``lkv_params``."""
+    res = tf.prefill(
+        params, cfg, x_tokens, lkv_params=lkv_params, capture_scores=True,
+        want_logits="none", encoder_embeds=encoder_embeds,
+        mrope_positions=mrope_positions,
+    )
+    return res.scores
+
+
+class LossReport(NamedTuple):
+    loss: jnp.ndarray
+    kl_per_layer: jnp.ndarray  # (L,)
+
+
+def lkv_loss(
+    params: dict,
+    cfg: ModelConfig,
+    lkv_params: dict,
+    x_tokens: jnp.ndarray,
+    xy_tokens: jnp.ndarray,
+    n_in: int,
+    **kw,
+) -> tuple[jnp.ndarray, LossReport]:
+    s_gt = gt_scores(params, cfg, xy_tokens, n_in, **kw)  # (L,B,H,n)
+    s_lkv = lookahead_scores(params, cfg, lkv_params, x_tokens, **kw)
+    p = normalize_l1(s_gt)
+    q = normalize_l1(s_lkv)
+    kl = kl_divergence(p, q)  # (L, B, H)
+    loss = kl.mean()
+    return loss, LossReport(loss=loss, kl_per_layer=kl.mean(axis=(1, 2)))
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    *,
+    encoder_embeds: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Plain next-token cross-entropy (pretraining loss for the SSM arch and
+    the tiny end-to-end example)."""
+    res = tf.prefill(params, cfg, tokens[:, :-1], want_logits="all",
+                     encoder_embeds=encoder_embeds)
+    logits = res.logits  # (B, S-1, V) f32
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean() + res.aux

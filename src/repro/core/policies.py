@@ -1,0 +1,162 @@
+"""Policy orchestration: single-pass policies call ``transformer.prefill``
+directly; the draft-based baselines (LAQ, SpecKV) compose multiple passes.
+
+* **LAQ** (Lookahead Q-Cache, Wang et al. 2025): SnapKV-evict → greedy-draft
+  ``draft_len`` tokens with the compressed cache → re-evict the full prompt
+  KV using the draft rows as observation queries.
+* **SpecKV** (Galim et al. 2026): a smaller *draft model* generates the draft;
+  the target model then scores the prompt with the draft as the observation
+  window.
+
+Both re-run a scoring prefill over [X; draft] (our TPU adaptation: recompute
+beats parking the full uncompressed KV in HBM — the analytical TTFT model in
+``benchmarks/bench_ttft.py`` accounts the paper's original memory-traffic
+formulation).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import EvictionConfig, ModelConfig
+from repro.models import transformer as tf
+
+SINGLE_PASS = (
+    "full", "random", "streaming_llm", "snapkv", "pyramidkv", "tova", "h2o",
+    "lookaheadkv", "gt_oracle",
+)
+MULTI_PASS = ("laq", "speckv")
+ALL_POLICIES = SINGLE_PASS + MULTI_PASS
+
+
+class EvictionResult(NamedTuple):
+    logits: jnp.ndarray  # (B, V) next-token logits after the prompt
+    cache: dict  # budgeted decode cache
+
+
+def greedy_decode(
+    params: dict,
+    cfg: ModelConfig,
+    first_token: jnp.ndarray,  # (B, 1)
+    cache: dict,
+    steps: int,
+) -> tuple[jnp.ndarray, dict]:
+    """Greedy continuation.  Returns (tokens (B, steps) incl. first, cache)."""
+
+    def step(carry, _):
+        tok, cache = carry
+        logits, cache = tf.decode_step(params, cfg, tok, cache)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(tok.dtype)
+        return (nxt, cache), tok[:, 0]
+
+    (last, cache), toks = jax.lax.scan(
+        step, (first_token, cache), None, length=steps
+    )
+    return jnp.moveaxis(toks, 0, 1), cache  # (B, steps)
+
+
+def sample_decode(
+    params: dict,
+    cfg: ModelConfig,
+    first_logits: jnp.ndarray,  # (B, V)
+    cache: dict,
+    steps: int,
+    *,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Temperature sampling (0 = greedy).  Returns (tokens (B, steps), cache)."""
+    if temperature <= 0.0:
+        first = jnp.argmax(first_logits, -1)[:, None].astype(jnp.int32)
+        return greedy_decode(params, cfg, first, cache, steps)
+    assert key is not None
+    keys = jax.random.split(key, steps)
+
+    def pick(logits, k):
+        return jax.random.categorical(k, logits / temperature)[:, None]
+
+    def step(carry, k):
+        tok, cache = carry
+        logits, cache = tf.decode_step(params, cfg, tok, cache)
+        nxt = pick(logits, k).astype(tok.dtype)
+        return (nxt, cache), tok[:, 0]
+
+    first = pick(first_logits, keys[0]).astype(jnp.int32)
+    (last, cache), toks = jax.lax.scan(step, (first, cache), keys[1:])
+    toks = jnp.concatenate([jnp.moveaxis(toks, 0, 1), last], axis=1)
+    return toks, cache
+
+
+def _draft_then_rescore(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, n_in)
+    draft: jnp.ndarray,  # (B, draft_len)
+    evict: EvictionConfig,
+    extra_slots: int,
+) -> EvictionResult:
+    """Shared second half of LAQ/SpecKV: evict with draft rows as obs."""
+    n_in = tokens.shape[1]
+    xy = jnp.concatenate([tokens, draft.astype(tokens.dtype)], axis=1)
+    # want_logits="last" with gt_boundary set returns row n_in-1's logits —
+    # the target model's exact next-token distribution after X.
+    return tf.prefill(
+        params, cfg, xy, policy="gt_oracle", gt_boundary=n_in, evict=evict,
+        extra_slots=extra_slots, want_logits="last",
+    )
+
+
+def run_eviction(
+    policy: str,
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, n_in) int tokens (or embeds for vlm)
+    *,
+    evict: EvictionConfig,
+    lkv_params: Optional[dict] = None,
+    draft_params: Optional[dict] = None,
+    draft_cfg: Optional[ModelConfig] = None,
+    extra_slots: int = 0,
+    encoder_embeds: Optional[jnp.ndarray] = None,
+    mrope_positions: Optional[jnp.ndarray] = None,
+) -> EvictionResult:
+    """Prefill + evict under ``policy``; returns next-token logits and the
+    budgeted decode cache."""
+    kw = dict(encoder_embeds=encoder_embeds, mrope_positions=mrope_positions)
+    if policy in SINGLE_PASS:
+        res = tf.prefill(
+            params, cfg, tokens, policy=policy, evict=evict,
+            lkv_params=lkv_params if policy == "lookaheadkv" else None,
+            extra_slots=extra_slots, **kw,
+        )
+        return EvictionResult(logits=res.logits, cache=res.cache)
+
+    if policy == "laq":
+        # phase 1: cheap SnapKV eviction
+        res1 = tf.prefill(params, cfg, tokens, policy="snapkv", evict=evict,
+                          extra_slots=evict.draft_len + 1, **kw)
+        # phase 2: draft with the compressed cache (the pseudo future)
+        first = jnp.argmax(res1.logits, -1)[:, None].astype(jnp.int32)
+        draft, _ = greedy_decode(params, cfg, first, res1.cache,
+                                 evict.draft_len)
+        # phase 3: re-evict with draft-row observation queries
+        res3 = _draft_then_rescore(params, cfg, tokens, draft, evict,
+                                   extra_slots)
+        return EvictionResult(logits=res3.logits, cache=res3.cache)
+
+    if policy == "speckv":
+        assert draft_params is not None and draft_cfg is not None, \
+            "speckv needs a draft model"
+        dres = tf.prefill(draft_params, draft_cfg, tokens, policy="full",
+                          extra_slots=evict.draft_len + 1, **kw)
+        dfirst = jnp.argmax(dres.logits, -1)[:, None].astype(jnp.int32)
+        draft, _ = greedy_decode(draft_params, draft_cfg, dfirst, dres.cache,
+                                 evict.draft_len)
+        res = _draft_then_rescore(params, cfg, tokens, draft, evict,
+                                  extra_slots)
+        return EvictionResult(logits=res.logits, cache=res.cache)
+
+    raise ValueError(f"unknown policy {policy}; known: {ALL_POLICIES}")

@@ -1,0 +1,86 @@
+"""Importance-score computation (paper §2, §3.1).
+
+All scores flow through the same primitive — ``ops.lookahead_score`` — with
+different observation queries:
+
+    ground truth   : obs = the true response rows Y          (training target)
+    lookaheadkv    : obs = the learned lookahead-token rows  (the paper)
+    snapkv         : obs = the last ``window`` prompt rows
+    tova           : obs = the last prompt row
+    h2o            : obs = every prompt row (cumulative column mass)
+
+Position-based policies (streaming_llm, random, full) don't need attention
+at all and are handled in ``eviction.py``.
+
+Score post-processing (paper's standard eviction configuration):
+GQA mean-reduction over the query heads of each KV group, then 1-D max-pool
+(kernel 7, same padding) along the key axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+# observation semantics per policy: how many trailing rows act as queries
+OBS_POLICIES = ("lookaheadkv", "snapkv", "tova", "h2o", "gt")
+POSITION_POLICIES = ("streaming_llm", "random", "full")
+
+
+def observation_scores(
+    q_obs: jnp.ndarray,  # (B, n_obs, H, hd)
+    k_full: jnp.ndarray,  # (B, n_prompt + n_obs, KV, hd)
+    n_prompt: int,
+    *,
+    window=None,
+    kv_mask: jnp.ndarray | None = None,
+    q_offset: int | None = None,
+) -> jnp.ndarray:
+    """Per-q-head scores (B, H, n_prompt), f32 — softmax rows include the
+    observation keys (Algorithm 2 slices after the softmax)."""
+    return ops.lookahead_score(
+        q_obs, k_full, n_prompt, kv_mask=kv_mask, window=window,
+        q_offset=q_offset,
+    )
+
+
+def gqa_reduce(scores: jnp.ndarray, num_kv_heads: int) -> jnp.ndarray:
+    """(B, H, S) -> (B, KV, S): mean over each KV group's query heads
+    (Ada-KV-style GQA compatibility, the paper's default)."""
+    B, H, S = scores.shape
+    group = H // num_kv_heads
+    return scores.reshape(B, num_kv_heads, group, S).mean(axis=2)
+
+
+def maxpool1d(scores: jnp.ndarray, kernel: int) -> jnp.ndarray:
+    """Max-pool along the last axis with 'same' padding (paper kernel=7).
+
+    Clustering effect: keeping a token pulls its neighbourhood along, which
+    preserves local context around high-attention spikes.
+    """
+    if kernel <= 1:
+        return scores
+    pad = kernel // 2
+    x = jnp.pad(scores, [(0, 0)] * (scores.ndim - 1) + [(pad, pad)],
+                constant_values=-jnp.inf)
+    windows = [x[..., i : i + scores.shape[-1]] for i in range(kernel)]
+    return jnp.stack(windows, axis=0).max(axis=0)
+
+
+def normalize_l1(scores: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """L1 normalization ŝ = s / ||s||₁ over the key axis (paper eq. (4))."""
+    return scores / jnp.maximum(
+        jnp.sum(jnp.abs(scores), axis=-1, keepdims=True), eps
+    )
+
+
+def postprocess(
+    scores_per_qhead: jnp.ndarray,  # (B, H, S)
+    num_kv_heads: int,
+    pool_kernel: int,
+) -> jnp.ndarray:
+    """Eviction-time pipeline: GQA-reduce then max-pool.  (B, KV, S)."""
+    s = gqa_reduce(scores_per_qhead, num_kv_heads)
+    return maxpool1d(s, pool_kernel)

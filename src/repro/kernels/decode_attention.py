@@ -1,0 +1,99 @@
+"""Pallas TPU flash-decode: one query token against a long (possibly evicted)
+KV cache.
+
+Decode is memory-bound: the roofline term is cache bytes / HBM bandwidth, so
+the kernel's job is to stream K/V tiles exactly once at full bandwidth while
+the (1 × block_k) score tile lives in registers/VMEM.  grid = (B, H, nk),
+key axis innermost with (m, l, acc) scratch carry — the flash-attention
+recurrence specialized to a single query row.
+
+Oracle: ``ref.decode_attention``.  jnp fallback in ``ops.decode_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            nk, scale):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)  # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_k, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    ok = mask_ref[0, :]  # (block_k,)
+    s = (k @ q) * scale  # (block_k,)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)  # (block_k,)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_scr[0] * corr + p.sum()
+    acc_scr[...] = acc_scr[...] * corr + p @ v  # (hd,)
+    m_scr[0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,  # (B, H, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd)
+    v: jnp.ndarray,
+    *,
+    kv_mask: jnp.ndarray | None = None,  # (B, Sk)
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    block_k = min(block_k, Sk)
+    pad = (-Sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    mask = jnp.ones((B, Sk), bool) if kv_mask is None else kv_mask
+    if pad:
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nk = (Sk + pad) // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, nk=nk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, ik: (b, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, ik: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for LookaheadKV importance scores — the paper's hot spot.
+
+Computes, per (batch, q-head), the mean over observation rows of the softmax
+probability mass each prompt key receives:
+
+    scores[b, h, j] = 1/n_obs · Σ_i  softmax_row_i(q_obs · Kᵀ / √d)[j]
+
+TPU adaptation (DESIGN.md §3): the observation block (n_obs ≤ 128 rows of
+hd ≤ 256) stays resident in VMEM; keys stream HBM→VMEM in (block_k, hd)
+tiles.  Per-key normalized mass needs the *final* row normalizers, so the
+grid runs the key axis twice (phase trick): phase 0 accumulates the online
+(m, l) statistics into scratch, phase 1 re-streams each key tile and emits
+``exp(s − m)/l`` column means directly — the (n_obs × Sk) score matrix never
+hits HBM, and output traffic is Sk floats per head instead of n_obs·Sk.
+
+grid = (B, H, 2·nk); phase = ik // nk.
+
+Oracle: ``ref.lookahead_score``.  jnp fallback: ``ops._chunked_lookahead_score``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, mask_ref, o_ref, m_scr, l_scr, *,
+            n_prompt, n_obs, block_k, nk, scale):
+    j = pl.program_id(2)
+    ik = jnp.where(j < nk, j, j - nk)
+    phase1 = j >= nk
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (n_obs, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_k, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (n_obs, block_k)
+
+    q_pos = n_prompt + jax.lax.broadcasted_iota(jnp.int32, (n_obs, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (n_obs, block_k), 1)
+    ok = k_pos <= q_pos  # causal among obs rows; prompt keys all visible
+    ok &= mask_ref[0, :][None, :]  # key validity (padding / evicted)
+    s = jnp.where(ok, s, NEG_INF)
+
+    @pl.when(jnp.logical_not(phase1))
+    def _pass1():
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        l_scr[...] = l_scr[...] * jnp.exp(m_prev - m_new) + p.sum(axis=-1)
+        m_scr[...] = m_new
+
+    @pl.when(phase1)
+    def _pass2():
+        m = m_scr[...]
+        l = jnp.maximum(l_scr[...], 1e-30)
+        p = jnp.where(ok, jnp.exp(s - m[:, None]), 0.0) / l[:, None]
+        o_ref[0, 0, :] = p.mean(axis=0).astype(o_ref.dtype)
+
+
+def lookahead_score_pallas(
+    q_obs: jnp.ndarray,  # (B, n_obs, H, hd)
+    k: jnp.ndarray,  # (B, Sk, KV, hd) — prompt keys then obs keys
+    n_prompt: int,
+    *,
+    kv_mask: jnp.ndarray | None = None,  # (B, n_prompt)
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, n_obs, H, hd = q_obs.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    block_k = min(block_k, Sk)
+    pad = (-Sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    full_mask = jnp.ones((B, Sk), bool)
+    if kv_mask is not None:
+        full_mask = full_mask.at[:, :n_prompt].set(kv_mask)
+    if pad:
+        full_mask = jnp.pad(full_mask, ((0, 0), (0, pad)))
+    Skp = Sk + pad
+    nk = Skp // block_k
+
+    kernel = functools.partial(
+        _kernel, n_prompt=n_prompt, n_obs=n_obs, block_k=block_k, nk=nk,
+        scale=scale,
+    )
+    scores = pl.pallas_call(
+        kernel,
+        grid=(B, H, 2 * nk),
+        in_specs=[
+            pl.BlockSpec((1, n_obs, 1, hd), lambda b, h, j: (b, 0, h, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, hd),
+                lambda b, h, j, g=group, nk=nk: (
+                    b, jnp.where(j < nk, j, j - nk), h // g, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, block_k),
+                lambda b, h, j, nk=nk: (b, jnp.where(j < nk, j, j - nk)),
+            ),
+        ],
+        # phase-0 iterations park on block 0 (never written by the kernel in
+        # that phase; phase 1's first iteration overwrites it before any
+        # write-back escapes), phase-1 iterations emit block ik.
+        out_specs=pl.BlockSpec(
+            (1, 1, block_k),
+            lambda b, h, j, nk=nk: (b, h, jnp.where(j < nk, 0, j - nk)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Skp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n_obs,), jnp.float32),
+            pltpu.VMEM((n_obs,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_obs, k, full_mask)
+    return scores[..., :n_prompt]

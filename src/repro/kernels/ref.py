@@ -1,0 +1,191 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately naive (materialize full score matrices, sequential
+scans) — they define numerical ground truth for the kernel allclose sweeps in
+``tests/test_kernels_*.py`` and for small-scale CPU execution.
+
+Shared conventions
+------------------
+q:  (B, Sq, H, hd)       queries
+k:  (B, Sk, KV, hd)      keys   (GQA: H = KV * G)
+v:  (B, Sk, KV, hd)      values
+kv_mask: (B, Sk) bool    validity of each cache slot (True = attend)
+positions are absolute; causal masking compares absolute positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_gqa(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, KV*G, hd) by repeating each kv head."""
+    return jnp.repeat(x, group, axis=2)
+
+
+def _logits_mask(
+    q_pos: jnp.ndarray,  # (B, Sq)
+    k_pos: jnp.ndarray,  # (B, Sk)
+    *,
+    causal: bool,
+    window,  # None = unbounded; python int or traced int32 scalar otherwise
+    kv_mask: jnp.ndarray | None,
+) -> jnp.ndarray:
+    """(B, Sq, Sk) bool: True where attention is allowed."""
+    ok = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if causal:
+        ok &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    if kv_mask is not None:
+        ok &= kv_mask[:, None, :]
+    return ok
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=None,
+    q_pos: jnp.ndarray | None = None,
+    k_pos: jnp.ndarray | None = None,
+    kv_mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Naive masked softmax attention.  Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(Sk - Sq, Sk), (B, Sq))
+    if k_pos is None:
+        k_pos = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    kf = _expand_gqa(k, group)
+    vf = _expand_gqa(v, group)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    ok = _logits_mask(q_pos, k_pos, causal=causal, window=window, kv_mask=kv_mask)
+    logits = jnp.where(ok[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, H, hd) single query token
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    kv_mask: jnp.ndarray | None = None,  # (B, Sk) or (B, Sk, KV) per-head
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    kf = _expand_gqa(k, group)
+    vf = _expand_gqa(v, group)
+    logits = jnp.einsum(
+        "bhd,bkhd->bhk", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    if kv_mask is not None:
+        if kv_mask.ndim == 2:
+            ok = kv_mask[:, None, :]  # (B, 1, Sk)
+        else:  # (B, Sk, KV) -> (B, H, Sk)
+            ok = jnp.repeat(jnp.moveaxis(kv_mask, 2, 1), group, axis=1)
+        logits = jnp.where(ok, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def lookahead_score(
+    q_obs: jnp.ndarray,  # (B, n_obs, H, hd) — queries of the observation rows
+    k: jnp.ndarray,  # (B, n_prompt + n_obs, KV, hd) — prompt keys then obs keys
+    n_prompt: int,
+    *,
+    kv_mask: jnp.ndarray | None = None,  # (B, n_prompt) prompt-key validity
+    window=None,  # sliding-window span for local layers (None = full)
+    q_offset: int | None = None,  # absolute position of obs row 0 (default n_prompt)
+) -> jnp.ndarray:
+    """Ground-truth importance scores (paper eq. (1)/(3)).
+
+    The observation rows sit causally *after* the prompt: obs row i attends to
+    all prompt keys plus obs keys j <= i.  The softmax normalizer therefore
+    includes the obs-to-obs mass (Algorithm 2 slices A[n_in:, :n_in] *after*
+    the softmax).  Returns per-q-head scores, mean over obs rows:
+    (B, H, n_prompt), f32.
+    """
+    B, n_obs, H, hd = q_obs.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    group = H // KV
+    kf = _expand_gqa(k, group)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q_obs.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    # causal among obs rows; all prompt keys visible.
+    q_pos = (n_prompt if q_offset is None else q_offset) + jnp.arange(n_obs)
+    k_pos = jnp.arange(Sk)
+    ok = k_pos[None, :] <= q_pos[:, None]  # (n_obs, Sk)
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    ok = jnp.broadcast_to(ok[None], (B, n_obs, Sk))
+    if kv_mask is not None:
+        full_mask = jnp.concatenate(
+            [kv_mask, jnp.ones((B, Sk - n_prompt), bool)], axis=1
+        )
+        ok &= full_mask[:, None, :]
+    logits = jnp.where(ok[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, H, n_obs, Sk)
+    scores = probs[..., :n_prompt].mean(axis=2)  # (B, H, n_prompt)
+    return scores
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # (B, S, nh, hd) — pre-discretization inputs
+    dt: jnp.ndarray,  # (B, S, nh)    — softplus'd timestep
+    A: jnp.ndarray,  # (nh,)          — negative decay rates (A = -exp(A_log))
+    Bm: jnp.ndarray,  # (B, S, G, ds)
+    Cm: jnp.ndarray,  # (B, S, G, ds)
+    *,
+    initial_state: jnp.ndarray | None = None,  # (B, nh, hd, ds)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential Mamba-2 SSD recurrence oracle.
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = h_t · C_t
+
+    Returns (y: (B, S, nh, hd), final_state: (B, nh, hd, ds)), f32.
+    """
+    B, S, nh, hd = x.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    heads_per_group = nh // G
+    Bm = jnp.repeat(Bm, heads_per_group, axis=2)  # (B,S,nh,ds)
+    Cm = jnp.repeat(Cm, heads_per_group, axis=2)
+    x, dt = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bm, Cm = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    if initial_state is None:
+        initial_state = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs  # (B,nh,hd), (B,nh), (B,nh,ds), (B,nh,ds)
+        decay = jnp.exp(A[None] * dtt)  # (B, nh)
+        h = h * decay[..., None, None] + (
+            (dtt[..., None] * xt)[..., None] * bt[..., None, :]
+        )
+        y = jnp.einsum("bnhs,bns->bnh", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

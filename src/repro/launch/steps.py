@@ -1,0 +1,169 @@
+"""Step functions the launcher jits: one per (arch kind × shape kind).
+
+* ``train``   — the paper's module training (GT pass + lookahead pass + KL +
+                Adam on lookahead params) for technique archs; plain LM loss +
+                Adam on everything for the attention-free SSM arch.
+* ``prefill`` — serving prefill with in-scan eviction (the technique's
+                inference path); plain forward + state cache for SSM.
+* ``decode``  — one token against a seq_len cache (``serve_step``).
+
+Every builder returns (fn, abstract_inputs_fn) so the dry-run can lower the
+exact callable with exact ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import EvictionConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.core import objective
+from repro.models import transformer as tf
+from repro.optim import adam
+
+# Response length for training shapes (paper: max generation length 512).
+TRAIN_N_OUT = 512
+# Serving eviction budget for prefill shapes (paper evaluates 64..2048).
+PREFILL_BUDGET = 2048
+DECODE_MARGIN = 128
+
+
+def train_batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    n_out = min(TRAIN_N_OUT, S // 8)
+    n_in = S - n_out
+    d = {"n_in": n_in, "n_out": n_out}
+    if cfg.embeds_in:
+        d["x"] = jax.ShapeDtypeStruct((B, n_in, cfg.d_model), jnp.bfloat16)
+        d["y"] = jax.ShapeDtypeStruct((B, n_out), jnp.int32)
+        d["mrope"] = jax.ShapeDtypeStruct((3, B, n_in), jnp.int32)
+    else:
+        d["x"] = jax.ShapeDtypeStruct((B, n_in), jnp.int32)
+        d["xy"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        d["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.num_frames, cfg.d_model), jnp.bfloat16)
+    return d
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """(params, lkv, opt_state, batch) -> (lkv', opt_state', loss)  — or the
+    LM variant (params, opt_state, tokens) for the SSM arch."""
+    if not cfg.technique_applies:
+
+        def lm_step(params, opt_state, batch):
+            def loss_fn(p):
+                return objective.lm_loss(p, cfg, batch["xy"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, metrics = adam.update(params, grads, opt_state, tc)
+            return params, opt_state, loss
+
+        return lm_step
+
+    def lkv_step(params, lkv, opt_state, batch):
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw["encoder_embeds"] = batch["frames"]
+
+        if cfg.embeds_in:
+            # VLM: X arrives as patch embeddings; Y as generated tokens.
+            x = batch["x"]
+            y_emb = jnp.take(params["embed"], batch["y"], axis=0)
+            xy = jnp.concatenate([x.astype(y_emb.dtype), y_emb], axis=1)
+            n_in = x.shape[1]
+            kw_gt = dict(kw, mrope_positions=None)
+
+            def loss_fn(lkv):
+                s_gt = objective.gt_scores(params, cfg, xy, n_in, **kw_gt)
+                s_lkv = objective.lookahead_scores(
+                    params, cfg, lkv, x, mrope_positions=batch.get("mrope"),
+                    **kw)
+                from repro.core.scoring import normalize_l1
+
+                kl = objective.kl_divergence(
+                    normalize_l1(s_gt), normalize_l1(s_lkv))
+                return kl.mean()
+
+        else:
+
+            def loss_fn(lkv):
+                loss, _ = objective.lkv_loss(
+                    params, cfg, lkv, batch["x"], batch["xy"],
+                    batch["x"].shape[1], **kw)
+                return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(lkv)
+        lkv, opt_state, metrics = adam.update(lkv, grads, opt_state, tc)
+        return lkv, opt_state, loss
+
+    return lkv_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      budget: int = PREFILL_BUDGET):
+    evict = EvictionConfig(policy="lookaheadkv", budget=min(budget, shape.seq_len // 4))
+
+    if not cfg.technique_applies:
+
+        def ssm_prefill(params, batch):
+            res = tf.prefill(params, cfg, batch["tokens"],
+                             want_ssm_cache=True)
+            return res.logits, res.cache
+
+        return ssm_prefill
+
+    def prefill_step(params, lkv, batch):
+        res = tf.prefill(
+            params, cfg, batch["tokens"], lkv_params=lkv,
+            policy="lookaheadkv", evict=evict, extra_slots=DECODE_MARGIN,
+            encoder_embeds=batch.get("frames"),
+            mrope_positions=batch.get("mrope"),
+        )
+        return res.logits, res.cache
+
+    return prefill_step
+
+
+def prefill_batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d: dict = {}
+    if cfg.embeds_in:
+        d["tokens"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        d["mrope"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    else:
+        d["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        d["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.num_frames, cfg.d_model), jnp.bfloat16)
+    return d
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    def decode(params, token, cache):
+        return tf.decode_step(params, cfg, token, cache, mesh=mesh)
+
+    return decode
+
+
+def decode_batch_shapes(cfg: ModelConfig, shape: ShapeConfig,
+                        hot_slots: int = 0):
+    """(token struct, cache struct tree) for a cache holding seq_len tokens.
+
+    ``hot_slots`` > 0 selects the split-cache decode layout (§Perf): the
+    seq_len prompt cache is frozen/read-only and appends go to a replicated
+    hot ring buffer."""
+    B, S = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    capacity = S if cfg.uses_attention else 0
+    cache = jax.eval_shape(
+        functools.partial(tf.init_decode_cache, cfg, B, capacity,
+                          fill_len=capacity, hot_slots=hot_slots)
+        if hot_slots else
+        functools.partial(tf.init_decode_cache, cfg, B, capacity,
+                          fill_len=max(S - 1, 0))
+    )
+    return token, cache

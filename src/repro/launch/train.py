@@ -1,0 +1,91 @@
+"""Production training launcher: LookaheadKV module training under pjit on
+whatever mesh is available (full production meshes on TPU; a host mesh on
+CPU for verification).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+        --steps 40 --batch 4
+
+On a real v5e deployment this same entry point runs with
+``--mesh pod|multipod`` (requires the matching device count).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import io as ckpt
+from repro.common import sharding as sh
+from repro.common.config import TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core import objective
+from repro.core.lookahead import init_lookahead_params
+from repro.data import synthetic
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as tf
+from repro.optim import adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod", "multipod"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--n-in", type=int, default=64)
+    ap.add_argument("--n-out", type=int, default=12)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="experiments/ckpt/train_lkv.npz")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not cfg.technique_applies:
+        raise SystemExit(f"{args.arch}: technique inapplicable (DESIGN.md §5)"
+                         " — use examples/train_e2e.py --lm for LM training")
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multipod"))
+    tc = TrainConfig(steps=args.steps, lr=args.lr, batch_size=args.batch,
+                     n_in=args.n_in, n_out=args.n_out, seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed)
+    with mesh:
+        params = tf.init_params(key, cfg)
+        pspecs = sh.param_specs(cfg, mesh)
+        params = jax.device_put(
+            params, jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs))
+        lkv = init_lookahead_params(jax.random.PRNGKey(args.seed + 1), cfg,
+                                    params["layers"])
+        lkv = jax.device_put(lkv, NamedSharding(mesh, P()))
+        opt = adam.init(lkv)
+
+        step_fn = jax.jit(steps_mod.make_train_step(cfg, tc))
+        it = synthetic.MixtureIterator(cfg, args.batch, args.n_in, args.n_out,
+                                       seed=args.seed)
+        dp = sh.batch_axes(mesh)
+        t0 = time.time()
+        for i in range(args.steps):
+            b = next(it)
+            x = jnp.asarray(b.x)
+            xy = jnp.concatenate([x, jnp.asarray(b.y)], axis=1)
+            batch = {"x": x, "xy": xy}
+            batch = jax.device_put(
+                batch, NamedSharding(mesh, P(dp, None)))
+            lkv, opt, loss = step_fn(params, lkv, opt, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(loss):.4f}  "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+    ckpt.save(args.ckpt, jax.device_get(lkv),
+              metadata={"arch": cfg.name, "steps": args.steps})
+    print(f"saved -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+"""Grouped-query attention block with RoPE / M-RoPE, QKV bias, sliding-window
+and local:global patterns, lookahead-LoRA hooks, KV caches, and the
+importance-score capture path used by the eviction policies.
+
+Single-layer params (stacked along L by transformer.py):
+
+    {"wq": (D, H*hd), "wk": (D, KV*hd), "wv": (D, KV*hd), "wo": (H*hd, D),
+     ["bq","bk","bv"]: biases when cfg.attn.qkv_bias}
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import AttentionConfig, ModelConfig
+from repro.kernels import ops
+from repro.models import rope
+from repro.models.layers import dense_init, linear
+
+
+class AttnInputs(NamedTuple):
+    """Per-call dynamic context for the attention block."""
+
+    positions: jnp.ndarray  # (B, S) absolute positions of the q rows
+    mrope_positions: Optional[jnp.ndarray] = None  # (3, B, S)
+    lookahead_mask: Optional[jnp.ndarray] = None  # (B, S, 1) selective-LoRA mask
+    # decode-time cache (see transformer.make_attn_cache): dict with
+    # k: (B, C, KV, hd), v: idem, pos: (B, C), mask: (B, C)
+    cache: Optional[dict] = None
+    cache_cursor: Optional[jnp.ndarray] = None  # scalar int32 insert index
+    # production mesh for shard_map'd decode attention (split-cache path)
+    mesh: Optional[object] = None
+
+
+def init(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    a = cfg.attn
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, a.q_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, a.kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, a.kv_dim, dtype),
+        "wo": dense_init(ks[3], a.q_dim, cfg.d_model, dtype),
+    }
+    if a.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((a.q_dim,), dtype)
+        p["bk"] = jnp.zeros((a.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((a.kv_dim,), dtype)
+    return p
+
+
+def _lora_for(lora: Optional[dict], name: str) -> Optional[dict]:
+    if lora is None:
+        return None
+    return lora.get(name)
+
+
+def qkv(
+    p: dict,
+    a: AttentionConfig,
+    h: jnp.ndarray,  # (B, S, D)
+    inp: AttnInputs,
+    *,
+    lora: Optional[dict] = None,
+    lora_scale: float = 1.0,
+    rotary: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Project + rotate.  Returns q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    B, S, _ = h.shape
+    lm = inp.lookahead_mask
+    q = linear(h, p["wq"], p.get("bq"), lora=_lora_for(lora, "wq"),
+               lora_mask=lm, lora_scale=lora_scale)
+    k = linear(h, p["wk"], p.get("bk"), lora=_lora_for(lora, "wk"),
+               lora_mask=lm, lora_scale=lora_scale)
+    v = linear(h, p["wv"], p.get("bv"), lora=_lora_for(lora, "wv"),
+               lora_mask=lm, lora_scale=lora_scale)
+    q = q.reshape(B, S, a.num_heads, a.head_dim)
+    k = k.reshape(B, S, a.num_kv_heads, a.head_dim)
+    v = v.reshape(B, S, a.num_kv_heads, a.head_dim)
+    if rotary:
+        if a.mrope and inp.mrope_positions is not None:
+            q = rope.apply_mrope(q, inp.mrope_positions, a.rope_theta, a.mrope_sections)
+            k = rope.apply_mrope(k, inp.mrope_positions, a.rope_theta, a.mrope_sections)
+        else:
+            q = rope.apply_rope(q, inp.positions, a.rope_theta)
+            k = rope.apply_rope(k, inp.positions, a.rope_theta)
+    return q, k, v
+
+
+def prefill_attention(
+    p: dict,
+    a: AttentionConfig,
+    h: jnp.ndarray,
+    inp: AttnInputs,
+    *,
+    is_global: jnp.ndarray | bool = True,
+    lora: Optional[dict] = None,
+    lora_scale: float = 1.0,
+    causal: bool = True,
+    rotary: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence attention.  Returns (out, q, k, v).
+
+    ``is_global`` may be a traced bool (scanned local/global flag): local
+    layers apply the sliding-window mask, global layers don't.  Both cases
+    share one kernel call by selecting the window value (huge = unbounded).
+    """
+    q, k, v = qkv(p, a, h, inp, lora=lora, lora_scale=lora_scale, rotary=rotary)
+    window = layer_window(a, is_global) if causal else None
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    B, S = h.shape[:2]
+    out = out.reshape(B, S, a.q_dim)
+    out = linear(out, p["wo"], lora=_lora_for(lora, "wo"),
+                 lora_mask=inp.lookahead_mask, lora_scale=lora_scale)
+    return out, q, k, v
+
+
+_HUGE_WINDOW = 1 << 30
+
+
+def layer_window(a: AttentionConfig, is_global) -> "int | jnp.ndarray | None":
+    """Resolve the attention window for one layer.
+
+    Returns None (full attention), a static int (uniform sliding window) or a
+    traced int32 scalar (scanned local/global pattern: global layers get a
+    window larger than any sequence, which the masks treat as unbounded).
+    """
+    patterned = a.global_every > 0 or len(a.global_layers) > 0
+    if patterned:
+        if isinstance(is_global, bool):
+            return None if is_global else a.sliding_window
+        return jnp.where(
+            jnp.asarray(is_global),
+            jnp.int32(_HUGE_WINDOW),
+            jnp.int32(a.sliding_window),
+        )
+    if a.sliding_window > 0:
+        return a.sliding_window
+    return None
+
+
+def decode_attention_step(
+    p: dict,
+    a: AttentionConfig,
+    h1: jnp.ndarray,  # (B, 1, D) current token hidden
+    inp: AttnInputs,
+    *,
+    window=None,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step against the cache.  Returns (out (B,1,D), new cache).
+
+    Cache layout (leading L axis stripped by the layer scan):
+        k/v: (B, C, KV, hd);  pos/mask: (B, C, KV) — *per kv head*, because
+        eviction keeps different token positions per head.
+    """
+    cache = inp.cache
+    B = h1.shape[0]
+    KV = a.num_kv_heads
+    q, k_new, v_new = qkv(p, a, h1, inp)
+    cursor = inp.cache_cursor
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, cursor, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, cursor, 0, 0))
+    new_pos = jnp.broadcast_to(inp.positions[:, :, None], (B, 1, KV))
+    pos = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (0, cursor, 0))
+    mask = jax.lax.dynamic_update_slice(
+        cache["mask"], jnp.ones((B, 1, KV), bool), (0, cursor, 0)
+    )
+    att_mask = mask
+    if window is not None:
+        att_mask = mask & ((new_pos[:, :1] - pos) < window)
+    out = ops.decode_attention(q[:, 0], k, v, kv_mask=att_mask)
+    out = out.reshape(B, 1, a.q_dim)
+    out = linear(out, p["wo"])
+    new_cache = {"k": k, "v": v, "pos": pos, "mask": mask}
+    return out, new_cache
+
+
+def cross_attention(
+    p: dict,
+    a: AttentionConfig,
+    h: jnp.ndarray,  # (B, Sq, D) decoder hidden
+    enc_k: jnp.ndarray,  # (B, Se, KV, hd) precomputed encoder keys
+    enc_v: jnp.ndarray,
+    *,
+    enc_mask: Optional[jnp.ndarray] = None,
+    lora: Optional[dict] = None,
+    lora_mask: Optional[jnp.ndarray] = None,
+    lora_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Whisper-style decoder→encoder cross attention (no positions)."""
+    B, Sq, _ = h.shape
+    q = linear(h, p["wq"], p.get("bq"), lora=_lora_for(lora, "wq"),
+               lora_mask=lora_mask, lora_scale=lora_scale)
+    q = q.reshape(B, Sq, a.num_heads, a.head_dim)
+    out = ops.flash_attention(q, enc_k, enc_v, causal=False, kv_mask=enc_mask)
+    out = out.reshape(B, Sq, a.q_dim)
+    return linear(out, p["wo"], lora=_lora_for(lora, "wo"),
+                  lora_mask=lora_mask, lora_scale=lora_scale)
+
+
+def cross_attention_decode_evicted(
+    p: dict,
+    a: AttentionConfig,
+    h1: jnp.ndarray,  # (B, 1, D)
+    cross_cache: dict,  # k/v (B, Cc, KV, hd), mask (B, Cc, KV)
+) -> jnp.ndarray:
+    """Single-token cross attention over an *evicted* encoder cache (per-head
+    kept sets => per-head masks; beyond-paper cross-KV eviction)."""
+    B = h1.shape[0]
+    q = linear(h1, p["wq"], p.get("bq")).reshape(B, 1, a.num_heads, a.head_dim)
+    out = ops.decode_attention(q[:, 0], cross_cache["k"], cross_cache["v"],
+                               kv_mask=cross_cache["mask"])
+    return linear(out.reshape(B, 1, a.q_dim), p["wo"])
+
+
+def encode_kv(p: dict, a: AttentionConfig, h_enc: jnp.ndarray):
+    """Project encoder states once into cross-attention K/V."""
+    B, Se, _ = h_enc.shape
+    k = linear(h_enc, p["wk"], p.get("bk")).reshape(B, Se, a.num_kv_heads, a.head_dim)
+    v = linear(h_enc, p["wv"], p.get("bv")).reshape(B, Se, a.num_kv_heads, a.head_dim)
+    return k, v
+
+
+def decode_attention_step_evicting(
+    p: dict,
+    a: AttentionConfig,
+    h1: jnp.ndarray,  # (B, 1, D)
+    inp: AttnInputs,
+    *,
+    window=None,
+) -> tuple[jnp.ndarray, dict]:
+    """Decoding-stage eviction step (beyond-paper: the paper names decode
+    eviction as future work).  The cache carries a ``score`` field —
+    cumulative attention mass per slot (H2O-style heavy hitters, per kv
+    head).  While capacity remains, behave like the plain step; once full,
+    the new token overwrites the *lowest-cumulative-score* slot (never the
+    newest), so the cache stays within its budget during generation.
+    """
+    cache = inp.cache
+    B = h1.shape[0]
+    KV, hd = a.num_kv_heads, a.head_dim
+    C = cache["k"].shape[1]
+    G = a.num_heads // KV
+    q, k_new, v_new = qkv(p, a, h1, inp)
+
+    # one-step attention distribution of the new query over current slots,
+    # grouped by kv head: (B, KV, G, C)
+    qg = q[:, 0].reshape(B, KV, G, hd).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bckd->bkgc", qg, cache["k"].astype(jnp.float32)
+    ) / jnp.sqrt(jnp.float32(hd))
+    mask_bkc = jnp.moveaxis(cache["mask"], 1, 2)  # (B, KV, C)
+    logits = jnp.where(mask_bkc[:, :, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).mean(axis=2)  # (B, KV, C)
+    add = jnp.moveaxis(probs, 1, 2)  # (B, C, KV)
+    score = cache["score"] + jnp.where(cache["mask"], add, 0.0)
+
+    cursor = inp.cache_cursor
+    full = cursor >= C
+    victim = jnp.argmin(jnp.where(cache["mask"], score, jnp.inf), axis=1)
+    slot = jnp.where(full, victim, jnp.minimum(cursor, C - 1))  # (B, KV)
+    onehot = jax.nn.one_hot(slot, C, axis=1, dtype=jnp.float32)  # (B, C, KV)
+    sel = onehot[..., None].astype(cache["k"].dtype)  # (B, C, KV, 1)
+    k = cache["k"] * (1 - sel) + k_new * sel  # k_new (B,1,KV,hd) broadcasts
+    v = cache["v"] * (1 - sel) + v_new * sel
+    new_pos = jnp.broadcast_to(inp.positions[:, :, None], (B, 1, KV))
+    pos = jnp.where(onehot > 0, new_pos, cache["pos"])
+    mask = cache["mask"] | (onehot > 0)
+    score = jnp.where(onehot > 0, add, score)  # fresh slot restarts its tally
+
+    att_mask = mask
+    if window is not None:
+        att_mask = mask & ((new_pos - pos) < window)
+    out = ops.decode_attention(q[:, 0], k, v, kv_mask=att_mask)
+    out = linear(out.reshape(B, 1, a.q_dim), p["wo"])
+    new_cache = {"k": k, "v": v, "pos": pos, "mask": mask, "score": score}
+    return out, new_cache
+
+
+def _frozen_cache_stats(q, k, v, mask, *, mesh=None):
+    """Flash-decode stats over the frozen (possibly sequence-sharded) prompt
+    cache.  With a mesh whose "model" axis divides the cache length, the
+    computation runs under shard_map: each model rank reduces its local
+    sequence shard and the partials merge with pmax/psum — per-layer
+    collective traffic drops from gathering the full K/V (33 MB per layer on
+    qwen2-vl) to the (B, H[, hd]) stat tensors (§Perf decode iteration)."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return ops.decode_attention_stats(q, k, v, kv_mask=mask)
+    msize = mesh.shape["model"]
+    C = k.shape[1]
+    B = q.shape[0]
+    if C % msize != 0:
+        return ops.decode_attention_stats(q, k, v, kv_mask=mask)
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(n for n in mesh.axis_names if n != "model")
+    dp_total = 1
+    for a in dp:
+        dp_total *= int(mesh.shape[a])
+    bspec = dp if B % dp_total == 0 else None
+
+    def local(qv, kv, vv, mv):
+        m, l, acc = ops.decode_attention_stats(qv, kv, vv, kv_mask=mv)
+        gm = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - gm)
+        gl = jax.lax.psum(l * corr, "model")
+        gacc = jax.lax.psum(acc * corr[..., None], "model")
+        return gm, gl, gacc
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(bspec, "model", None, None),
+                  P(bspec, "model", None, None), P(bspec, "model", None)),
+        out_specs=(P(bspec, None), P(bspec, None), P(bspec, None, None)),
+        check_vma=False,
+    )(q, k, v, mask)
+
+
+def decode_attention_step_split(
+    p: dict,
+    a: AttentionConfig,
+    h1: jnp.ndarray,  # (B, 1, D)
+    inp: AttnInputs,
+    *,
+    window=None,
+) -> tuple[jnp.ndarray, dict]:
+    """Split-cache decode (§Perf decode iteration): the prompt cache is
+    *frozen* (read-only — it may stay sequence-sharded on "model" with no
+    per-step resharding) and new tokens append into a small *replicated*
+    hot ring buffer.  The two segments attend independently and merge via
+    online-softmax stats — numerically identical to single-cache attention.
+
+    cache = {k, v, pos, mask (frozen, (B,C,KV,·)),
+             hot_k, hot_v, hot_pos, hot_mask ((B,Hb,KV,·))}
+    """
+    cache = inp.cache
+    B = h1.shape[0]
+    KV = a.num_kv_heads
+    Hb = cache["hot_k"].shape[1]
+    q, k_new, v_new = qkv(p, a, h1, inp)
+    cursor = inp.cache_cursor  # counts hot-buffer appends (ring)
+    slot = jnp.mod(cursor, Hb)
+    hot_k = jax.lax.dynamic_update_slice(cache["hot_k"], k_new,
+                                         (0, slot, 0, 0))
+    hot_v = jax.lax.dynamic_update_slice(cache["hot_v"], v_new,
+                                         (0, slot, 0, 0))
+    new_pos = jnp.broadcast_to(inp.positions[:, :, None], (B, 1, KV))
+    hot_pos = jax.lax.dynamic_update_slice(cache["hot_pos"], new_pos,
+                                           (0, slot, 0))
+    hot_mask = jax.lax.dynamic_update_slice(
+        cache["hot_mask"], jnp.ones((B, 1, KV), bool), (0, slot, 0))
+
+    froz_mask = cache["mask"]
+    hm = hot_mask
+    if window is not None:
+        froz_mask = froz_mask & ((new_pos - cache["pos"]) < window)
+        hm = hm & ((new_pos - hot_pos) < window)
+    s1 = _frozen_cache_stats(q[:, 0], cache["k"], cache["v"], froz_mask,
+                             mesh=inp.mesh)
+    s2 = ops.decode_attention_stats(q[:, 0], hot_k, hot_v, kv_mask=hm)
+    out = ops.merge_attention_stats([s1, s2]).astype(h1.dtype)
+    out = linear(out.reshape(B, 1, a.q_dim), p["wo"])
+    new_cache = dict(cache)
+    new_cache.update({"hot_k": hot_k, "hot_v": hot_v, "hot_pos": hot_pos,
+                      "hot_mask": hot_mask})
+    return out, new_cache

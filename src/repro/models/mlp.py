@@ -1,0 +1,46 @@
+"""Gated MLP (SwiGLU / GeGLU) block with lookahead-LoRA hooks.
+
+Params: {"w_gate": (D, F), "w_up": (D, F), "w_down": (F, D)}
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import activation, dense_init, linear
+
+
+def init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, f, dtype),
+        "w_up": dense_init(k2, cfg.d_model, f, dtype),
+        "w_down": dense_init(k3, f, cfg.d_model, dtype),
+    }
+
+
+def apply(
+    p: dict,
+    cfg: ModelConfig,
+    h: jnp.ndarray,
+    *,
+    lora: Optional[dict] = None,
+    lora_mask: Optional[jnp.ndarray] = None,
+    lora_scale: float = 1.0,
+) -> jnp.ndarray:
+    def _l(name):
+        return None if lora is None else lora.get(name)
+
+    g = linear(h, p["w_gate"], lora=_l("w_gate"), lora_mask=lora_mask,
+               lora_scale=lora_scale)
+    u = linear(h, p["w_up"], lora=_l("w_up"), lora_mask=lora_mask,
+               lora_scale=lora_scale)
+    y = activation(g, cfg.act) * u
+    return linear(y, p["w_down"], lora=_l("w_down"), lora_mask=lora_mask,
+                  lora_scale=lora_scale)

@@ -1,0 +1,69 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl's M-RoPE.
+
+All functions are pure and shape-polymorphic over the batch/seq dims:
+
+    q: (B, S, H, hd)   positions: (B, S) int32   ->  rotated q
+
+M-RoPE (arXiv:2409.12191) splits the head dim into three sections driven by
+(temporal, height, width) position streams.  For the language backbone in this
+repo the three streams are supplied by ``input_specs`` (text tokens use
+t == h == w == absolute index, which makes M-RoPE coincide with RoPE — the
+structure is what the dry-run exercises).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim//2,) inverse frequencies, f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def _rotate(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., hd), angles: (..., hd//2) broadcastable."""
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (B, S, H, hd)
+    positions: jnp.ndarray,  # (B, S) int32
+    theta: float,
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd//2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd//2)
+    return _rotate(x, angles[:, :, None, :])
+
+
+def apply_mrope(
+    x: jnp.ndarray,  # (B, S, H, hd)
+    positions: jnp.ndarray,  # (3, B, S) int32: temporal, height, width
+    theta: float,
+    sections: tuple,  # (t, h, w) half-dim section sizes, sum == hd//2
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # (hd//2,)
+    # Build per-frequency position source by section.
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=hd // 2
+    )  # (hd//2,) in {0,1,2}
+    pos = positions.astype(jnp.float32)  # (3, B, S)
+    # (B, S, hd//2): pick the stream per frequency slot.
+    pos_per_freq = jnp.take(pos, sec_ids, axis=0)  # (hd//2, B, S)
+    pos_per_freq = jnp.moveaxis(pos_per_freq, 0, -1)  # (B, S, hd//2)
+    angles = pos_per_freq * freqs
+    return _rotate(x, angles[:, :, None, :])
+
+
+def text_mrope_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """Text-only stream: t == h == w == absolute position.  (B,S)->(3,B,S)."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

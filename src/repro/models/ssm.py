@@ -1,0 +1,189 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+in_proj fans the hidden state out to (z, x, B, C, dt); a short causal conv
+mixes x/B/C locally; the SSD scan (``repro.kernels.ops.ssd_scan`` — Pallas on
+TPU, chunked jnp elsewhere) runs the selective state-space recurrence; a
+gated RMSNorm and out_proj close the block.
+
+Decode keeps a constant-size recurrent cache: the conv tail (last conv_width-1
+inputs) and the SSM state (nh, hd, ds) — this is why SSM archs run the
+``long_500k`` shape that full-attention archs cannot.
+
+Single-layer params:
+    in_proj: (D, 2*di + 2*G*ds + nh)   [z | x | B | C | dt]
+    conv_w: (cw, di + 2*G*ds), conv_b: (di + 2*G*ds)
+    A_log: (nh,), D_skip: (nh,), dt_bias: (nh,), norm: (di,)
+    out_proj: (di, D)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, SSMConfig
+from repro.kernels import ops
+from repro.models.layers import dense_init, linear, rms_norm
+
+# B/C share a single group in our configs (Mamba-2 default ngroups=1).
+NGROUPS = 1
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    conv_dim = di + 2 * NGROUPS * s.d_state
+    return s, di, nh, conv_dim
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    s, di, nh, conv_dim = dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * NGROUPS * s.d_state + nh
+    lo, hi = s.a_init_range
+    a_init = jax.random.uniform(ks[2], (nh,), jnp.float32, lo, hi)
+    # dt_bias s.t. softplus(dt_bias) spans [dt_min, dt_max] log-uniformly
+    u = jax.random.uniform(ks[3], (nh,), jnp.float32)
+    dt = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(a_init),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[4], di, cfg.d_model, dtype),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_width - 1, conv_dim) rolling conv tail
+    state: jnp.ndarray  # (B, nh, hd, ds) f32 SSM state
+
+
+def init_cache(cfg: ModelConfig, batch: int) -> dict:
+    s, di, nh, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    s, di, nh, _ = dims(cfg)
+    gds = NGROUPS * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * gds], axis=-1)
+    return z, xbc, dt  # xbc = [x | B | C] shares the conv
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jnp.ndarray):
+    s, di, nh, _ = dims(cfg)
+    gds = NGROUPS * s.d_state
+    x, Bm, Cm = jnp.split(xbc, [di, di + gds], axis=-1)
+    shp = xbc.shape[:-1]
+    x = x.reshape(*shp, nh, s.head_dim)
+    Bm = Bm.reshape(*shp, NGROUPS, s.d_state)
+    Cm = Cm.reshape(*shp, NGROUPS, s.d_state)
+    return x, Bm, Cm
+
+
+def _causal_conv(w: jnp.ndarray, b: jnp.ndarray, xbc: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over the seq axis.  xbc: (B, S, C)."""
+    cw = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], cw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+cw-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * w[i][None, None, :] for i in range(cw)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def apply(
+    p: dict,
+    cfg: ModelConfig,
+    h: jnp.ndarray,  # (B, S, D)
+    *,
+    lora: Optional[dict] = None,
+    lora_mask: Optional[jnp.ndarray] = None,
+    lora_scale: float = 1.0,
+    initial_state: Optional[jnp.ndarray] = None,
+    conv_tail: Optional[jnp.ndarray] = None,  # (B, cw-1, conv_dim) carry-in
+) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence SSD pass.  Returns (out (B,S,D), cache for decode).
+
+    ``initial_state``/``conv_tail`` chain segments: the hybrid prefill runs
+    the real prompt first (whose final state becomes the decode cache) and
+    then the appended lookahead rows, so the cached recurrent state is not
+    polluted by observation tokens (they are discarded after scoring).
+    """
+    s, di, nh, conv_dim = dims(cfg)
+    B, S, _ = h.shape
+
+    def _l(name):
+        return None if lora is None else lora.get(name)
+
+    zxbcdt = linear(h, p["in_proj"], lora=_l("in_proj"), lora_mask=lora_mask,
+                    lora_scale=lora_scale)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc_preconv = xbc
+    xbc = _causal_conv(p["conv_w"], p["conv_b"], xbc, tail=conv_tail)
+    x, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,) negative rates
+
+    y, final_state = ops.ssd_scan(
+        x, dt, A, Bm, Cm, chunk=s.chunk_size, initial_state=initial_state
+    )  # f32
+    y = y + p["D_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(y, p["out_proj"], lora=_l("out_proj"), lora_mask=lora_mask,
+                 lora_scale=lora_scale)
+    # cache: conv tail = last (cw-1) *pre-conv* xbc rows (prepend the carry-in
+    # so short segments still have a full tail).
+    if conv_tail is not None:
+        xbc_preconv = jnp.concatenate([conv_tail, xbc_preconv], axis=1)
+    cache = {"conv": xbc_preconv[:, -(s.conv_width - 1):], "state": final_state}
+    return out, cache
+
+
+def step(
+    p: dict,
+    cfg: ModelConfig,
+    h1: jnp.ndarray,  # (B, 1, D)
+    cache: dict,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token recurrent step.  Returns (out (B,1,D), new cache)."""
+    s, di, nh, conv_dim = dims(cfg)
+    B = h1.shape[0]
+    zxbcdt = linear(h1, p["in_proj"])  # (B, 1, ·)
+    z, xbc_new, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, cw, C)
+    xbc = sum(
+        conv_in[:, i : i + 1] * p["conv_w"][i][None, None, :]
+        for i in range(s.conv_width)
+    )
+    xbc = jax.nn.silu(xbc + p["conv_b"][None, None, :])
+    x, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,1,nh)
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ops.ssd_step(
+        x[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], cache["state"]
+    )
+    y = y.astype(jnp.float32) + p["D_skip"][None, :, None] * x[:, 0].astype(jnp.float32)
+    y = y.reshape(B, 1, di).astype(h1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    new_cache = {"conv": conv_in[:, 1:], "state": new_state}
+    return out, new_cache

@@ -1,0 +1,666 @@
+"""Unified decoder(-encoder) stack covering all ten assigned architectures.
+
+One parameter tree + three entry points:
+
+* ``prefill``      — full-sequence forward with optional lookahead rows,
+                     per-layer importance scoring, and in-scan KV eviction.
+                     Used for serving prefill, the LookaheadKV training passes
+                     (GT pass and lookahead pass), and plain LM training.
+* ``decode_step``  — single-token step against the (possibly evicted) cache.
+* ``encode``       — whisper bidirectional encoder over stub frame embeddings.
+
+Per-layer parameters are stacked along a leading ``L`` axis and the depth
+runs under ``jax.lax.scan`` — HLO size is O(1) in depth, which keeps the
+512-device dry-run compiles tractable (DESIGN.md §4).
+
+Block composition by arch type:
+    dense / vlm / moe : h += attn(ln1(h));            h += ffn|moe(ln2(h))
+    ssm (mamba2)      : h += ssd(ln1(h))              (no FFN when d_ff == 0)
+    hybrid (hymba)    : h += ½·(attn(u) + ssd(u)),  u = ln1(h);  h += ffn(ln2(h))
+    audio (whisper)   : encoder blocks (bidir attn + ffn);
+                        decoder blocks (self-attn + cross-attn + ffn)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import EvictionConfig, ModelConfig
+from repro.core import eviction as ev
+from repro.core import scoring
+from repro.core.lookahead import append_lookahead, lora_scale
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import AttnInputs, layer_window
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.models.rope import text_mrope_positions
+
+# Policies that derive scores from observation-row attention.
+OBS_POLICIES = ("lookaheadkv", "gt_oracle", "snapkv", "pyramidkv", "tova", "h2o")
+POSITION_POLICIES = ("full", "random", "streaming_llm")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _init_layer(key, cfg: ModelConfig, *, with_cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p: dict = {"ln1": _zeros((d,), dtype)}
+    if cfg.uses_attention:
+        p["attn"] = attn_mod.init(ks[0], cfg)
+    if cfg.uses_ssm:
+        p["ssm"] = ssm_mod.init(ks[1], cfg)
+    if with_cross:
+        p["cross"] = attn_mod.init(ks[2], cfg, cross=True)
+        p["ln_cross"] = _zeros((d,), dtype)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init(ks[3], cfg)
+        p["ln2"] = _zeros((d,), dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = mlp_mod.init(ks[4], cfg)
+        p["ln2"] = _zeros((d,), dtype)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    return {
+        "ln1": _zeros((d,), dtype),
+        "attn": attn_mod.init(ks[0], cfg),
+        "ln2": _zeros((d,), dtype),
+        "mlp": mlp_mod.init(ks[1], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_enc, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    with_cross = cfg.is_encoder_decoder
+    layers = jax.vmap(
+        lambda k: _init_layer(k, cfg, with_cross=with_cross)
+    )(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": _zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model,
+                                       cfg.padded_vocab, dtype)
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(k_enc, cfg.encoder.num_layers + 1)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_encoder_layer(k, cfg))(ek[:-1]),
+            "pos_emb": (jax.random.normal(
+                ek[-1], (cfg.encoder.num_frames, cfg.d_model), jnp.float32
+            ) * 0.02).astype(dtype),
+            "final_norm": _zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def is_global_flags(cfg: ModelConfig) -> Optional[np.ndarray]:
+    """Per-layer bool array for local:global patterns, or None if uniform."""
+    if cfg.attn is None:
+        return None
+    a = cfg.attn
+    if a.global_layers:
+        f = np.zeros(cfg.num_layers, bool)
+        f[list(a.global_layers)] = True
+        return f
+    if a.global_every > 0:
+        idx = np.arange(cfg.num_layers)
+        return (idx % a.global_every) == (a.global_every - 1)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed(params: dict, cfg: ModelConfig, inputs: jnp.ndarray) -> jnp.ndarray:
+    if cfg.embeds_in and jnp.issubdtype(inputs.dtype, jnp.floating):
+        return inputs.astype(jnp.dtype(cfg.dtype))
+    return jnp.take(params["embed"], inputs, axis=0)
+
+
+def unembed(params: dict, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    """Logits over the *padded* vocab; pad rows masked to -inf (they carry
+    zero probability under softmax/argmax/categorical)."""
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]
+        logits = jnp.einsum("...d,vd->...v", h, w).astype(jnp.float32)
+    else:
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, F, D) stub embeddings -> (B, F, D) encoder states."""
+    enc = params["encoder"]
+    h = frames.astype(jnp.dtype(cfg.dtype)) + enc["pos_emb"][None]
+    a = cfg.attn
+    B, F, _ = h.shape
+    inp = AttnInputs(positions=jnp.broadcast_to(jnp.arange(F), (B, F)))
+
+    def body(h, lp):
+        u = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        out, *_ = attn_mod.prefill_attention(
+            lp["attn"], a, u, inp, causal=False, rotary=False
+        )
+        h = h + out
+        u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + mlp_mod.apply(lp["mlp"], cfg, u)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, enc["layers"])
+    return rms_norm(h, enc["final_norm"], cfg.norm_eps)
+
+
+def encode_cross_kv(params: dict, cfg: ModelConfig, h_enc: jnp.ndarray):
+    """Stacked (L, B, Se, KV, hd) cross K/V for every decoder layer."""
+    a = cfg.attn
+    cross = params["layers"]["cross"]
+    return jax.vmap(lambda cp: attn_mod.encode_kv(cp, a, h_enc))(cross)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+class PrefillResult(NamedTuple):
+    logits: Optional[jnp.ndarray]  # (B, V) last-real-row logits, or (B, S, V)
+    cache: Any  # decode cache pytree or None
+    scores: Optional[jnp.ndarray]  # (L, B, H, n_score) f32
+    aux: jnp.ndarray  # MoE load-balance loss (scalar f32)
+
+
+def _policy_budget_schedule(cfg: ModelConfig, policy: str, budget: int,
+                            beta: float):
+    L = cfg.num_layers
+    if policy == "pyramidkv":
+        budgets = ev.pyramid_budgets(L, budget, beta)
+        capacity = int(2.0 * beta / (beta + 1.0) * budget) + 1
+    else:
+        budgets = ev.uniform_budgets(L, budget)
+        capacity = budget
+    return budgets, capacity
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    inputs: jnp.ndarray,  # (B, S) int tokens or (B, S, D) embeds
+    *,
+    lkv_params: Optional[dict] = None,  # lookahead rows + selective LoRA on
+    policy: Optional[str] = None,  # eviction policy; None => no attn cache
+    evict: Optional[EvictionConfig] = None,
+    extra_slots: int = 0,  # empty tail capacity for decode appends
+    capture_scores: bool = False,  # stack per-layer per-head scores (training)
+    gt_boundary: Optional[int] = None,  # GT pass: X|Y boundary in ``inputs``
+    mrope_positions: Optional[jnp.ndarray] = None,  # (3, B, S)
+    encoder_embeds: Optional[jnp.ndarray] = None,  # whisper (B, F, D)
+    want_logits: str = "last",  # "last" | "all" | "none"
+    want_ssm_cache: bool = False,
+) -> PrefillResult:
+    a = cfg.attn
+    lk = cfg.lookahead
+    evict = evict or EvictionConfig()
+    use_lookahead_rows = (policy == "lookaheadkv") or (
+        capture_scores and lkv_params is not None and gt_boundary is None
+    )
+
+    h = embed(params, cfg, inputs)
+    B, n_real = h.shape[:2]
+    lookahead_mask = None
+    if use_lookahead_rows:
+        assert lkv_params is not None, "lookaheadkv needs trained modules"
+        h, lookahead_mask = append_lookahead(h, lkv_params)
+    S = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mrope = None
+    if a is not None and a.mrope:
+        if mrope_positions is None:
+            mrope = text_mrope_positions(positions)
+        elif mrope_positions.shape[2] < S:  # extend for lookahead rows
+            extra = S - mrope_positions.shape[2]
+            mx = mrope_positions.max(axis=2, keepdims=True)
+            ext = mx + 1 + jnp.broadcast_to(jnp.arange(extra), (3, B, extra))
+            mrope = jnp.concatenate([mrope_positions, ext], axis=2)
+        else:
+            mrope = mrope_positions
+
+    # --- score/eviction geometry (static) ---
+    needs_scores = capture_scores or (policy in OBS_POLICIES)
+    obs_policy = policy if policy in OBS_POLICIES else None
+    if capture_scores and obs_policy is None:
+        obs_policy = "gt_oracle" if gt_boundary is not None else "lookaheadkv"
+    window_size = lk.window_size if lk else 32
+    if obs_policy in ("lookaheadkv",):
+        boundary = n_real  # obs rows appended after the real prompt
+    elif obs_policy == "gt_oracle":
+        assert gt_boundary is not None
+        boundary = gt_boundary
+    elif obs_policy in ("snapkv", "pyramidkv"):
+        boundary = S - window_size
+    elif obs_policy == "tova":
+        boundary = S - 1
+    elif obs_policy == "h2o":
+        boundary = S
+    else:
+        boundary = S
+    n_obs = S - boundary if obs_policy != "h2o" else S
+    n_keys = boundary if obs_policy in ("lookaheadkv", "gt_oracle") else n_real
+    do_evict = policy is not None and cfg.uses_attention
+    adaptive_heads = (do_evict and evict.head_alloc == "adaptive"
+                      and policy not in ("full",))
+    if do_evict:
+        budgets, capacity = _policy_budget_schedule(
+            cfg, policy, evict.budget if policy != "full" else n_keys,
+            evict.pyramid_beta,
+        )
+        if adaptive_heads:
+            capacity = int(evict.budget * evict.adaptive_ceiling)
+        capacity = min(capacity, n_keys)
+    else:
+        budgets = jnp.zeros((cfg.num_layers,), jnp.int32)
+        capacity = 0
+
+    # hybrid archs need their recurrent cache whenever a decode cache is built
+    want_ssm_cache = want_ssm_cache or (do_evict and cfg.uses_ssm)
+
+    flags = is_global_flags(cfg)
+    patterned = flags is not None
+    ls = lora_scale(cfg) if (lkv_params is not None and use_lookahead_rows) else 1.0
+    lora_tree = (lkv_params or {}).get("lora") if use_lookahead_rows else None
+
+    inp = AttnInputs(
+        positions=positions, mrope_positions=mrope,
+        lookahead_mask=lookahead_mask,
+    )
+
+    # whisper: run encoder once, stack cross K/V as scan xs
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        assert encoder_embeds is not None, "whisper needs frame embeddings"
+        h_enc = encode(params, cfg, encoder_embeds)
+        cross_kv = encode_cross_kv(params, cfg, h_enc)
+
+    xs: dict = {"p": params["layers"]}
+    if lora_tree is not None:
+        xs["lora"] = lora_tree
+    if patterned:
+        xs["flag"] = jnp.asarray(flags)
+    if do_evict:
+        xs["budget"] = budgets
+    if cross_kv is not None:
+        xs["ck"], xs["cv"] = cross_kv
+
+    def body(h, x):
+        lp = x["p"]
+        lora_l = x.get("lora")
+        flag = x.get("flag", True)
+        ys: dict = {}
+        q = k = v = None
+        if cfg.uses_attention or cfg.uses_ssm:
+            u = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            delta = 0.0
+            if cfg.uses_attention:
+                a_out, q, k, v = attn_mod.prefill_attention(
+                    lp["attn"], a, u, inp, is_global=flag,
+                    lora=None if lora_l is None else lora_l.get("attn"),
+                    lora_scale=ls,
+                )
+                delta = delta + a_out
+            if cfg.uses_ssm:
+                # Observation rows (lookahead tokens or a draft suffix) must
+                # not pollute the cached recurrent state: run the real prompt
+                # first, cache its state, then chain the observation segment.
+                split = None
+                if use_lookahead_rows:
+                    split = n_real
+                elif gt_boundary is not None:
+                    split = gt_boundary
+                if split is not None and split < S:
+                    s_out1, ssm_cache = ssm_mod.apply(
+                        lp["ssm"], cfg, u[:, :split]
+                    )
+                    s_out2, _ = ssm_mod.apply(
+                        lp["ssm"], cfg, u[:, split:],
+                        lora=(lora_l.get("ssm")
+                              if (lora_l and use_lookahead_rows) else None),
+                        lora_mask=jnp.ones((B, S - split, 1), u.dtype),
+                        lora_scale=ls,
+                        initial_state=ssm_cache["state"],
+                        conv_tail=ssm_cache["conv"],
+                    )
+                    s_out = jnp.concatenate([s_out1, s_out2], axis=1)
+                else:
+                    s_out, ssm_cache = ssm_mod.apply(lp["ssm"], cfg, u)
+                delta = delta + s_out
+                if want_ssm_cache:
+                    ys["ssm"] = ssm_cache
+            if cfg.hybrid:
+                delta = delta * 0.5
+            h = h + delta
+        if cfg.is_encoder_decoder:
+            u_cross = rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+            h = h + attn_mod.cross_attention(
+                lp["cross"], a, u_cross, x["ck"], x["cv"],
+                lora=None if lora_l is None else lora_l.get("cross"),
+                lora_mask=lookahead_mask, lora_scale=ls,
+            )
+            if do_evict and evict.cross_budget > 0 and n_obs > 0:
+                # beyond-paper: evict the *encoder* KV with the same
+                # observation queries (non-causal: all frames visible)
+                B_, Se = u_cross.shape[0], x["ck"].shape[1]
+                qc = attn_mod.linear(
+                    u_cross[:, boundary:], lp["cross"]["wq"],
+                    lp["cross"].get("bq"),
+                ).reshape(B_, -1, a.num_heads, a.head_dim)
+                sc = scoring.observation_scores(qc, x["ck"], Se, q_offset=Se)
+                sc = scoring.postprocess(
+                    sc, a.num_kv_heads, lk.pool_kernel if lk else 7)
+                ys["cross_cache"] = dict(ev.evict_layer(
+                    sc, x["ck"], x["cv"], min(evict.cross_budget, Se)
+                )._asdict())
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None:
+            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            moe_lora = None
+            if lora_l is not None and lora_l.get("moe"):
+                moe_lora = lora_l["moe"].get("shared")
+            if cfg.moe.dispatch == "sparse":
+                mo, aux = moe_mod.apply_sparse(
+                    lp["moe"], cfg, u, lora=moe_lora,
+                    lora_mask=lookahead_mask, lora_scale=ls,
+                )
+            else:
+                mo, aux = moe_mod.apply(
+                    lp["moe"], cfg, u, lora=moe_lora,
+                    lora_mask=lookahead_mask, lora_scale=ls,
+                )
+            h = h + mo
+        elif cfg.d_ff > 0:
+            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + mlp_mod.apply(
+                lp["mlp"], cfg, u,
+                lora=None if lora_l is None else lora_l.get("mlp"),
+                lora_mask=lookahead_mask, lora_scale=ls,
+            )
+        ys["aux"] = aux
+
+        # ---- scoring + eviction (attention archs only) ----
+        if cfg.uses_attention and needs_scores and obs_policy is not None:
+            win = layer_window(a, flag)
+            if obs_policy == "h2o":
+                s_qh = scoring.observation_scores(
+                    q, k, n_keys, window=win, q_offset=0
+                )
+            else:
+                s_qh = scoring.observation_scores(
+                    q[:, boundary:], k, boundary, window=win
+                )
+            if capture_scores:
+                ys["scores"] = s_qh
+        if do_evict and cfg.uses_attention:
+            if policy in OBS_POLICIES:
+                s_kv = scoring.postprocess(
+                    s_qh, a.num_kv_heads, lk.pool_kernel if lk else 7
+                )
+                if policy in ("snapkv", "pyramidkv", "tova"):
+                    # scored keys cover [0, boundary); force-keep the window
+                    pad = n_keys - s_kv.shape[-1]
+                    if pad > 0:
+                        s_kv = jnp.pad(s_kv, ((0, 0), (0, 0), (0, pad)))
+                    s_kv = ev.keep_window(s_kv, S - boundary)
+            else:
+                s_kv = ev.position_scores(
+                    policy, n_keys, B, a.num_kv_heads, sink=evict.sink
+                )
+            hb = None
+            if adaptive_heads:
+                hb = ev.adaptive_head_budgets(s_kv, evict.budget, capacity)
+            cache_l = ev.evict_layer(
+                s_kv, k[:, :n_keys], v[:, :n_keys], capacity,
+                layer_budget=None if adaptive_heads else x.get("budget"),
+                head_budgets=hb, extra_slots=extra_slots,
+            )
+            ys["cache"] = dict(cache_l._asdict())
+        return h, ys
+
+    h, ys = jax.lax.scan(body, h, xs)
+
+    scores = ys.get("scores") if capture_scores else None
+    aux = ys["aux"].sum()
+
+    cache = None
+    if do_evict or (want_ssm_cache and cfg.uses_ssm):
+        cache = {}
+        if "cache" in ys:
+            cache["attn"] = ys["cache"]
+            cache["cursor"] = jnp.asarray(capacity + 0, jnp.int32)
+        if "ssm" in ys:
+            cache["ssm"] = ys["ssm"]
+        if cross_kv is not None:
+            if "cross_cache" in ys:
+                cache["cross"] = ys["cross_cache"]
+            else:
+                cache["cross"] = {"k": xs["ck"], "v": xs["cv"]}
+        next_pos = gt_boundary if gt_boundary is not None else n_real
+        cache["next_pos"] = jnp.full((B, 1), next_pos, jnp.int32)
+
+    logits = None
+    if want_logits == "last":
+        # for GT/draft-scoring passes the "current" position is the X|Y
+        # boundary, not the end of the appended observation rows
+        row = (gt_boundary if gt_boundary is not None else n_real) - 1
+        logits = unembed(params, cfg, h[:, row])
+    elif want_logits == "all":
+        logits = unembed(params, cfg, h[:, :n_real])
+    return PrefillResult(logits=logits, cache=cache, scores=scores, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, capacity: int, *, fill_len: int = 0,
+    hot_slots: int = 0,
+) -> dict:
+    """Fresh cache pytree (used directly and via jax.eval_shape for the
+    dry-run ShapeDtypeStructs).  ``fill_len`` marks the first slots valid —
+    decode-shape dry-runs model a cache already holding ``seq_len`` tokens."""
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    cache: dict = {}
+    if cfg.uses_attention:
+        a = cfg.attn
+        KV, hd = a.num_kv_heads, a.head_dim
+        valid = jnp.arange(capacity) < fill_len
+        cache["attn"] = {
+            "k": jnp.zeros((L, batch, capacity, KV, hd), dtype),
+            "v": jnp.zeros((L, batch, capacity, KV, hd), dtype),
+            "pos": jnp.broadcast_to(
+                jnp.arange(capacity, dtype=jnp.int32)[None, None, :, None],
+                (L, batch, capacity, KV),
+            ),
+            "mask": jnp.broadcast_to(
+                valid[None, None, :, None], (L, batch, capacity, KV)
+            ),
+        }
+        cache["cursor"] = jnp.asarray(fill_len, jnp.int32)
+        if hot_slots:
+            # split-cache decode: frozen prompt cache + replicated hot ring
+            cache["attn"]["hot_k"] = jnp.zeros((L, batch, hot_slots, KV, hd),
+                                               dtype)
+            cache["attn"]["hot_v"] = jnp.zeros((L, batch, hot_slots, KV, hd),
+                                               dtype)
+            cache["attn"]["hot_pos"] = jnp.zeros((L, batch, hot_slots, KV),
+                                                 jnp.int32)
+            cache["attn"]["hot_mask"] = jnp.zeros((L, batch, hot_slots, KV),
+                                                  bool)
+            cache["cursor"] = jnp.asarray(0, jnp.int32)  # hot-ring counter
+    if cfg.uses_ssm:
+        s, di, nh, conv_dim = ssm_mod.dims(cfg)
+        cache["ssm"] = {
+            "conv": jnp.zeros((L, batch, s.conv_width - 1, conv_dim), dtype),
+            "state": jnp.zeros((L, batch, nh, s.head_dim, s.d_state), jnp.float32),
+        }
+    if cfg.is_encoder_decoder:
+        a = cfg.attn
+        cache["cross"] = {
+            "k": jnp.zeros((L, batch, cfg.encoder.num_frames, a.num_kv_heads,
+                            a.head_dim), dtype),
+            "v": jnp.zeros((L, batch, cfg.encoder.num_frames, a.num_kv_heads,
+                            a.head_dim), dtype),
+        }
+    cache["next_pos"] = jnp.full((batch, 1), fill_len, jnp.int32)
+    return cache
+
+
+def add_decode_eviction_scores(cache: dict) -> dict:
+    """Arm a decode cache for decoding-stage eviction (beyond-paper; see
+    attention.decode_attention_step_evicting): valid prefill slots start
+    with unit cumulative score — they already won prefill eviction."""
+    attn = dict(cache["attn"])
+    attn["score"] = cache["attn"]["mask"].astype(jnp.float32)
+    out = dict(cache)
+    out["attn"] = attn
+    return out
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) int tokens or (B, 1, D) embeds
+    cache: dict,
+    *,
+    mrope_positions: Optional[jnp.ndarray] = None,  # (3, B, 1)
+    mesh=None,  # enables shard_map'd frozen-cache attention (split cache)
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step.  Returns (logits (B, V) f32, updated cache)."""
+    a = cfg.attn
+    h = embed(params, cfg, token)
+    B = h.shape[0]
+    positions = cache["next_pos"]  # (B, 1)
+    mrope = None
+    if a is not None and a.mrope:
+        mrope = (mrope_positions if mrope_positions is not None
+                 else text_mrope_positions(positions))
+    cursor = cache.get("cursor")
+    flags = is_global_flags(cfg)
+    patterned = flags is not None
+
+    xs: dict = {"p": params["layers"]}
+    if patterned:
+        xs["flag"] = jnp.asarray(flags)
+    if cfg.uses_attention and "attn" in cache:
+        xs["attn_cache"] = cache["attn"]
+    if cfg.uses_ssm:
+        xs["ssm_cache"] = cache["ssm"]
+    cross_evicted = (cfg.is_encoder_decoder
+                     and "mask" in cache.get("cross", {}))
+    if cfg.is_encoder_decoder:
+        if cross_evicted:
+            xs["cross_cache"] = cache["cross"]
+        else:
+            xs["ck"] = cache["cross"]["k"]
+            xs["cv"] = cache["cross"]["v"]
+
+    inp_base = AttnInputs(
+        positions=positions, mrope_positions=mrope,
+        cache_cursor=cursor, mesh=mesh,
+    )
+
+    def body(h, x):
+        lp = x["p"]
+        flag = x.get("flag", True)
+        ys: dict = {}
+        if cfg.uses_attention or cfg.uses_ssm:
+            u = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            delta = 0.0
+            if cfg.uses_attention and "attn_cache" in x:
+                inp = inp_base._replace(cache=x["attn_cache"])
+                win = layer_window(a, flag)
+                if "hot_k" in x["attn_cache"]:
+                    step_fn = attn_mod.decode_attention_step_split
+                elif "score" in x["attn_cache"]:
+                    step_fn = attn_mod.decode_attention_step_evicting
+                else:
+                    step_fn = attn_mod.decode_attention_step
+                a_out, new_c = step_fn(lp["attn"], a, u, inp, window=win)
+                delta = delta + a_out
+                ys["attn_cache"] = new_c
+            if cfg.uses_ssm:
+                s_out, new_s = ssm_mod.step(lp["ssm"], cfg, u, x["ssm_cache"])
+                delta = delta + s_out
+                ys["ssm_cache"] = new_s
+            if cfg.hybrid:
+                delta = delta * 0.5
+            h = h + delta
+        if cfg.is_encoder_decoder:
+            u = rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+            if cross_evicted:
+                h = h + attn_mod.cross_attention_decode_evicted(
+                    lp["cross"], a, u, x["cross_cache"])
+            else:
+                h = h + attn_mod.cross_attention(lp["cross"], a, u,
+                                                 x["ck"], x["cv"])
+        if cfg.moe is not None:
+            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.moe.dispatch == "sparse":
+                mo, _ = moe_mod.apply_sparse(lp["moe"], cfg, u)
+            else:
+                mo, _ = moe_mod.apply(lp["moe"], cfg, u)
+            h = h + mo
+        elif cfg.d_ff > 0:
+            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + mlp_mod.apply(lp["mlp"], cfg, u)
+        return h, ys
+
+    h, ys = jax.lax.scan(body, h, xs)
+    logits = unembed(params, cfg, h[:, 0])
+
+    new_cache = dict(cache)
+    if "attn_cache" in ys:
+        new_cache["attn"] = ys["attn_cache"]
+        if "hot_k" in cache["attn"]:
+            new_cache["cursor"] = cursor + 1  # hot-ring counter
+        else:
+            cap = cache["attn"]["k"].shape[2]
+            new_cache["cursor"] = jnp.minimum(cursor + 1, cap)
+    if "ssm_cache" in ys:
+        new_cache["ssm"] = ys["ssm_cache"]
+    new_cache["next_pos"] = positions + 1
+    return logits, new_cache

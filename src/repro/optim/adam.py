@@ -1,0 +1,79 @@
+"""Hand-rolled Adam + cosine schedule + global-norm clipping (no optax in the
+offline container).  State and updates are pytree-shaped like the trainable
+parameters; master weights and moments are f32 regardless of param dtype.
+
+Matches the paper's recipe (Table 16): Adam β=(0.9, 0.95), cosine to 0,
+2% warmup, grad-clip 1.0.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: Any  # first moment (f32 pytree)
+    nu: Any  # second moment (f32 pytree)
+
+
+def init(params: Any) -> AdamState:
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t
+    )
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=f32(params), nu=f32(params))
+
+
+def cosine_lr(step, tc: TrainConfig) -> jnp.ndarray:
+    warmup = max(int(tc.warmup_frac * tc.steps), 1)
+    warm = tc.lr * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / max(tc.steps - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * tc.lr * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def update(
+    params: Any,
+    grads: Any,
+    state: AdamState,
+    tc: TrainConfig,
+) -> tuple[Any, AdamState, dict]:
+    """One Adam step.  Returns (new params, new state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step
+    lr = cosine_lr(step, tc)
+    b1, b2, eps = tc.beta1, tc.beta2, 1e-8
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** (step + 1))
+        vhat = v / (1 - b2 ** (step + 1))
+        new_p = p.astype(jnp.float32) - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamState(step + 1, new_mu, new_nu), {
+        "lr": lr, "grad_norm": gnorm,
+    }

@@ -1,0 +1,136 @@
+"""Unit tests for the roofline machinery: jaxpr FLOP counting (scan-aware),
+collective-byte parsing, component cost model sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import analysis
+
+
+def test_jaxpr_cost_counts_matmul_exactly():
+    def f(a, b):
+        return a @ b
+
+    jx = jax.make_jaxpr(f)(jnp.zeros((64, 128)), jnp.zeros((128, 32)))
+    c = analysis.jaxpr_cost(jx.jaxpr)
+    assert c["flops"] == 2 * 64 * 128 * 32
+
+
+def test_jaxpr_cost_multiplies_scan_length():
+    def f(x, w):
+        def body(h, wi):
+            return h @ wi, None
+
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    jx = jax.make_jaxpr(f)(jnp.zeros((32, 32)), jnp.zeros((7, 32, 32)))
+    c = analysis.jaxpr_cost(jx.jaxpr)
+    assert c["flops"] == 7 * 2 * 32 ** 3  # XLA cost_analysis would say 1/7th
+
+
+def test_jaxpr_cost_recurses_pjit():
+    @jax.jit
+    def inner(a, b):
+        return a @ b
+
+    def f(a, b):
+        return inner(a, b) + inner(a, b)
+
+    jx = jax.make_jaxpr(f)(jnp.zeros((16, 16)), jnp.zeros((16, 16)))
+    c = analysis.jaxpr_cost(jx.jaxpr)
+    assert c["flops"] == 2 * 2 * 16 ** 3
+
+
+def test_collective_parse_synthetic_hlo():
+    hlo = """
+HloModule m
+%fused (x: f32[]) -> f32[] {
+  ROOT %y = f32[] add(%x, %x)
+}
+ENTRY %main () -> f32[2,4] {
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %p0), dimensions={0}
+  %ar = f32[2,4]{1,0} all-reduce(f32[2,4]{1,0} %p1), to_apply=%fused
+  %rs.1 = f32[16]{0} reduce-scatter(f32[128]{0} %p2), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %p3)
+}
+"""
+    out = analysis.collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 2 * 4 * 4
+    assert out["reduce-scatter"] == 16 * 4
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(
+        out[c] for c in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+
+
+def test_collective_loop_multiplier():
+    hlo = """
+ENTRY %main () -> f32[] {
+  %ar0 = f32[10]{0} all-reduce(f32[10]{0} %p0)
+}
+%while_body_1 (p: f32[]) -> f32[] {
+  %ar1 = f32[10]{0} all-reduce(f32[10]{0} %p1)
+}
+"""
+    out = analysis.collective_bytes_with_loops(hlo, loop_multiplier=5)
+    assert out["all-reduce"] == 10 * 4 + 5 * 10 * 4
+
+
+def test_component_costs_expose_replication():
+    """qwen2-1.5b: 12 heads don't divide model=16 => attention replicated;
+    d_ff=8960 divides => MLP sharded."""
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-1.5b")
+    comps = analysis.component_costs(cfg, "prefill", 32, 32768,
+                                     {"data": 16, "model": 16})
+    assert comps["attn_quadratic"]["model_shards"] == 1
+    assert comps["attn_proj"]["model_shards"] == 1
+    assert comps["mlp"]["model_shards"] == 16
+    assert comps["logits"]["model_shards"] == 16  # padded vocab shards
+    # minitron's 32 heads divide
+    cfg2 = get_config("minitron-8b")
+    comps2 = analysis.component_costs(cfg2, "prefill", 32, 32768,
+                                      {"data": 16, "model": 16})
+    assert comps2["attn_quadratic"]["model_shards"] == 16
+
+
+def test_sparse_moe_cuts_component_flops():
+    import dataclasses
+
+    from repro.configs import get_config
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    mesh = {"data": 16, "model": 16}
+    dense = analysis.component_costs(cfg, "train", 256, 4096, mesh)
+    sparse_cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="sparse"))
+    sparse = analysis.component_costs(sparse_cfg, "train", 256, 4096, mesh)
+    ratio = dense["moe_experts"]["flops"] / sparse["moe_experts"]["flops"]
+    assert abs(ratio - cfg.moe.num_experts
+               / (cfg.moe.top_k * cfg.moe.capacity_factor)) < 1e-6
+
+
+def test_roofline_terms_bottleneck():
+    rl = analysis.roofline_terms(
+        arch="x", shape="y", mesh="pod", chips=256,
+        hlo_flops_per_dev=197e12,  # exactly 1s of compute
+        hlo_bytes_per_dev=819e9 / 2,  # 0.5s memory
+        coll_bytes_per_dev=50e9 / 4,  # 0.25s collective
+        model_flops_global=197e12 * 256 / 2,
+    )
+    assert rl.bottleneck == "compute"
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.useful_flop_ratio - 0.5) < 1e-9
+
+
+def test_model_flops_moe_uses_active_params():
+    from repro.configs import get_config
+
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.active_params() < 0.35 * cfg.num_params()
+    mf = analysis.model_flops(cfg, "train", 1000)
+    assert mf == 6.0 * cfg.active_params() * 1000

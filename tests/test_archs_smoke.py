@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests (deliverable f): a reduced same-family
+variant of each assigned config runs one forward + one train step on CPU,
+asserting output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.common.config import EvictionConfig, TrainConfig
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import objective
+from repro.core.lookahead import init_lookahead_params
+from repro.models import transformer as tf
+from repro.optim import adam
+
+
+def _inputs(cfg, key, B=2, S=48):
+    if cfg.embeds_in:
+        return jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    return jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+
+def _kw(cfg, key, B=2):
+    if cfg.is_encoder_decoder:
+        return {"encoder_embeds": jax.random.normal(
+            key, (B, cfg.encoder.num_frames, cfg.d_model), jnp.float32)}
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_decode(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg)
+    B, S = 2, 48
+    x = _inputs(cfg, key, B, S)
+    kw = _kw(cfg, key, B)
+    if cfg.technique_applies and cfg.lookahead:
+        lkv = init_lookahead_params(key, cfg, params["layers"])
+        res = tf.prefill(params, cfg, x, lkv_params=lkv, policy="lookaheadkv",
+                         evict=EvictionConfig(budget=16), extra_slots=4, **kw)
+        assert res.cache["attn"]["k"].shape[:3] == (cfg.num_layers, B, 20)
+    else:
+        res = tf.prefill(params, cfg, x, want_ssm_cache=True, **kw)
+    assert res.logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(res.logits).all())
+    tok = jnp.argmax(res.logits, -1)[:, None]
+    lg, cache = tf.decode_step(params, cfg, tok, res.cache)
+    assert lg.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all())
+    assert int(cache["next_pos"][0, 0]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = tf.init_params(key, cfg)
+    tc = TrainConfig(steps=10, lr=1e-3)
+    B, n_in, n_out = 2, 40, 8
+    kw = _kw(cfg, key, B)
+    if not cfg.technique_applies:
+        tokens = jax.random.randint(key, (B, n_in), 0, cfg.vocab_size)
+
+        def loss_fn(p):
+            return objective.lm_loss(p, cfg, tokens)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        opt = adam.init(params)
+        new_params, opt, m = adam.update(params, grads, opt, tc)
+        assert bool(jnp.isfinite(loss))
+        assert float(m["grad_norm"]) > 0
+        return
+
+    lkv = init_lookahead_params(key, cfg, params["layers"])
+    if cfg.embeds_in:
+        x = _inputs(cfg, key, B, n_in)
+        y = jax.random.randint(key, (B, n_out), 0, cfg.vocab_size)
+        y_emb = jnp.take(params["embed"], y, axis=0)
+        xy = jnp.concatenate([x.astype(y_emb.dtype), y_emb], axis=1)
+
+        def loss_fn(l):
+            s_gt = objective.gt_scores(params, cfg, xy, n_in, **kw)
+            s_lkv = objective.lookahead_scores(params, cfg, l, x, **kw)
+            from repro.core.scoring import normalize_l1
+
+            return objective.kl_divergence(
+                normalize_l1(s_gt), normalize_l1(s_lkv)).mean()
+
+    else:
+        x = jax.random.randint(key, (B, n_in), 0, cfg.vocab_size)
+        xy = jnp.concatenate(
+            [x, jax.random.randint(key, (B, n_out), 0, cfg.vocab_size)], 1)
+
+        def loss_fn(l):
+            return objective.lkv_loss(params, cfg, l, x, xy, n_in, **kw)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(lkv)
+    assert bool(jnp.isfinite(loss)) and float(loss) >= 0
+    opt = adam.init(lkv)
+    new_lkv, opt, m = adam.update(lkv, grads, opt, tc)
+    assert float(m["grad_norm"]) > 0
+    # something actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        lkv, new_lkv)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyper-parameters (the public-pool table)."""
+    spec = {
+        "mamba2-130m": dict(num_layers=24, d_model=768, d_ff=0,
+                            vocab_size=50280),
+        "smollm-135m": dict(num_layers=30, d_model=576, d_ff=1536,
+                            vocab_size=49152),
+        "deepseek-moe-16b": dict(num_layers=28, d_model=2048, d_ff=1408,
+                                 vocab_size=102400),
+        "phi3.5-moe-42b-a6.6b": dict(num_layers=32, d_model=4096, d_ff=6400,
+                                     vocab_size=32064),
+        "minitron-8b": dict(num_layers=32, d_model=4096, d_ff=16384,
+                            vocab_size=256000),
+        "qwen2-vl-72b": dict(num_layers=80, d_model=8192, d_ff=29568,
+                             vocab_size=152064),
+        "gemma3-1b": dict(num_layers=26, d_model=1152, d_ff=6912,
+                          vocab_size=262144),
+        "qwen2-1.5b": dict(num_layers=28, d_model=1536, d_ff=8960,
+                           vocab_size=151936),
+        "whisper-small": dict(num_layers=12, d_model=768, d_ff=3072,
+                              vocab_size=51865),
+        "hymba-1.5b": dict(num_layers=32, d_model=1600, d_ff=5504,
+                           vocab_size=32001),
+    }
+    heads = {
+        "smollm-135m": (9, 3), "deepseek-moe-16b": (16, 16),
+        "phi3.5-moe-42b-a6.6b": (32, 8), "minitron-8b": (32, 8),
+        "qwen2-vl-72b": (64, 8), "gemma3-1b": (4, 1), "qwen2-1.5b": (12, 2),
+        "whisper-small": (12, 12), "hymba-1.5b": (25, 5),
+    }
+    for arch, want in spec.items():
+        cfg = get_config(arch)
+        for k, v in want.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+        if arch in heads:
+            assert (cfg.attn.num_heads, cfg.attn.num_kv_heads) == heads[arch]
+        assert cfg.source, arch
+    assert get_config("mamba2-130m").ssm.d_state == 128
+    assert get_config("hymba-1.5b").ssm.d_state == 16
+    assert get_config("deepseek-moe-16b").moe.num_experts == 64
+    assert get_config("deepseek-moe-16b").moe.top_k == 6
+    assert get_config("deepseek-moe-16b").moe.num_shared_experts == 2
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.num_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").moe.top_k == 2
+    assert get_config("gemma3-1b").attn.global_every == 6  # 5:1 local:global
+    assert get_config("qwen2-1.5b").attn.qkv_bias
+    assert get_config("qwen2-vl-72b").attn.mrope

@@ -1,0 +1,175 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) and the jnp chunked
+fallbacks, both against the pure-jnp oracles in ``repro.kernels.ref``.
+
+Each sweep randomizes (batch, seq, heads, kv heads, head_dim, block sizes,
+dtype) — the no-hypothesis property harness (see conftest)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import sweep_cases
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lookahead_score import lookahead_score_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _attn_case(rng):
+    hd = int(rng.choice([16, 32, 64]))
+    kv = int(rng.choice([1, 2, 4]))
+    group = int(rng.choice([1, 2, 3]))
+    bq = int(rng.choice([32, 64]))
+    nq = int(rng.integers(1, 5))
+    dtype = rng.choice(["float32", "bfloat16"])
+    return dict(B=int(rng.integers(1, 3)), S=bq * nq, H=kv * group, KV=kv,
+                hd=hd, bq=bq, bk=bq, window=int(rng.choice([0, 48])),
+                dtype=dtype, seed=int(rng.integers(1 << 30)))
+
+
+@pytest.mark.parametrize("case", sweep_cases(0, 8, _attn_case))
+def test_flash_attention_matches_oracle(case):
+    key = jax.random.PRNGKey(case["seed"])
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(case["dtype"])
+    q = jax.random.normal(ks[0], (case["B"], case["S"], case["H"], case["hd"])).astype(dt)
+    k = jax.random.normal(ks[1], (case["B"], case["S"], case["KV"], case["hd"])).astype(dt)
+    v = jax.random.normal(ks[2], (case["B"], case["S"], case["KV"], case["hd"])).astype(dt)
+    w = case["window"] or None
+    got = flash_attention_pallas(q, k, v, causal=True, window=w,
+                                 block_q=case["bq"], block_k=case["bk"],
+                                 interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=w)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", sweep_cases(1, 6, _attn_case))
+def test_chunked_attention_fallback_matches_oracle(case):
+    key = jax.random.PRNGKey(case["seed"])
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (case["B"], case["S"], case["H"], case["hd"]))
+    k = jax.random.normal(ks[1], (case["B"], case["S"], case["KV"], case["hd"]))
+    v = jax.random.normal(ks[2], (case["B"], case["S"], case["KV"], case["hd"]))
+    w = case["window"] or None
+    got = ops._chunked_attention(q, k, v, causal=True, window=w, q_offset=0,
+                                 kv_mask=None, block_q=case["bq"],
+                                 block_k=case["bk"])
+    want = ref.attention(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", sweep_cases(2, 6, _attn_case))
+def test_decode_attention_matches_oracle(case):
+    key = jax.random.PRNGKey(case["seed"])
+    ks = jax.random.split(key, 4)
+    B, S, H, KV, hd = case["B"], case["S"], case["H"], case["KV"], case["hd"]
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    mask = jax.random.bernoulli(ks[3], 0.8, (B, S))
+    mask = mask.at[:, 0].set(True)  # never fully-masked
+    got = decode_attention_pallas(q, k, v, kv_mask=mask,
+                                  block_k=case["bk"], interpret=True)
+    want = ref.decode_attention(q, k, v, kv_mask=mask)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_perhead_mask_fallback():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    B, S, KV, G, hd = 2, 4096, 2, 3, 32
+    q = jax.random.normal(ks[0], (B, KV * G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    mask = jax.random.bernoulli(ks[3], 0.7, (B, S, KV)).at[:, 0].set(True)
+    got = ops.decode_attention(q, k, v, kv_mask=mask, block_k=512)
+    want = ref.decode_attention(q, k, v, kv_mask=mask)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", sweep_cases(4, 8, _attn_case))
+def test_lookahead_score_matches_oracle(case):
+    key = jax.random.PRNGKey(case["seed"])
+    ks = jax.random.split(key, 2)
+    B, S, H, KV, hd = case["B"], case["S"], case["H"], case["KV"], case["hd"]
+    n_obs = min(16, S // 2)
+    n_prompt = S - n_obs
+    qo = jax.random.normal(ks[0], (B, n_obs, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    got = lookahead_score_pallas(qo, k, n_prompt, block_k=case["bk"],
+                                 interpret=True)
+    want = ref.lookahead_score(qo, k, n_prompt)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-3)
+    # chunked jnp fallback too
+    got2 = ops._chunked_lookahead_score(qo, k, n_prompt, kv_mask=None,
+                                        window=None, q_offset=None,
+                                        block_k=case["bk"])
+    np.testing.assert_allclose(got2, want, atol=1e-5, rtol=1e-3)
+
+
+def test_lookahead_score_rows_sum_below_one():
+    """Each obs row's prompt mass is < 1 (softmax includes obs keys)."""
+    key = jax.random.PRNGKey(5)
+    B, S, H, KV, hd = 2, 96, 4, 2, 16
+    n_obs, n_prompt = 8, 88
+    qo = jax.random.normal(key, (B, n_obs, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(6), (B, S, KV, hd))
+    s = ref.lookahead_score(qo, k, n_prompt)
+    assert (s.sum(-1) <= 1.0 + 1e-5).all()
+    assert (s >= 0).all()
+
+
+def _ssd_case(rng):
+    hd = int(rng.choice([16, 32]))
+    nh = int(rng.choice([2, 4, 8]))
+    ds = int(rng.choice([8, 16]))
+    chunk = int(rng.choice([16, 32]))
+    nc = int(rng.integers(1, 5))
+    return dict(B=int(rng.integers(1, 3)), S=chunk * nc, nh=nh, hd=hd, ds=ds,
+                chunk=chunk, seed=int(rng.integers(1 << 30)))
+
+
+@pytest.mark.parametrize("case", sweep_cases(7, 8, _ssd_case))
+def test_ssd_scan_matches_sequential_oracle(case):
+    key = jax.random.PRNGKey(case["seed"])
+    ks = jax.random.split(key, 6)
+    B, S, nh, hd, ds = case["B"], case["S"], case["nh"], case["hd"], case["ds"]
+    x = jax.random.normal(ks[0], (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, 1, ds))
+    Cm = jax.random.normal(ks[4], (B, S, 1, ds))
+    h0 = jax.random.normal(ks[5], (B, nh, hd, ds))
+    want_y, want_h = ref.ssd_scan(x, dt, A, Bm, Cm, initial_state=h0)
+    got_y, got_h = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=case["chunk"],
+                                   block_nh=min(2, nh), initial_state=h0,
+                                   interpret=True)
+    np.testing.assert_allclose(got_y, want_y, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(got_h, want_h, atol=2e-3, rtol=2e-3)
+    got_y2, got_h2 = ops.ssd_scan_chunked_jnp(x, dt, A, Bm, Cm,
+                                              chunk=case["chunk"],
+                                              initial_state=h0)
+    np.testing.assert_allclose(got_y2, want_y, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(got_h2, want_h, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_step_matches_scan():
+    """Decode recurrence == one-step slice of the full scan."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 5)
+    B, S, nh, hd, ds = 2, 8, 4, 16, 8
+    x = jax.random.normal(ks[0], (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, 1, ds))
+    Cm = jax.random.normal(ks[4], (B, S, 1, ds))
+    y_full, h_full = ref.ssd_scan(x, dt, A, Bm, Cm)
+    h = jnp.zeros((B, nh, hd, ds))
+    for t in range(S):
+        y_t, h = ops.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        np.testing.assert_allclose(y_t, y_full[:, t], atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h, h_full, atol=2e-4, rtol=2e-4)
