@@ -1,0 +1,177 @@
+"""Serving benchmark: continuous batching vs the lockstep engine on a
+Poisson mixed-length trace.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--requests 24]
+
+One trace, two engines.  Requests arrive with exponential interarrival
+times and prompt lengths drawn from three distinct buckets; both engines
+replay the same trace FCFS:
+
+* **lockstep** (the seed engine's contract): a batch must share one prompt
+  length, and prefill+decode run to completion before the next batch — it
+  can only batch same-length requests that have *already arrived*, so
+  mixed traffic degenerates toward batch-1 serves and queued requests wait
+  behind whole decode runs.
+* **continuous**: bucketed prefill feeds fixed decode slots; finished
+  requests retire mid-stream and queued requests take their slots, so the
+  decode batch stays full across heterogeneous lengths.
+
+Reported per engine: aggregate throughput (generated tokens / wall) and
+per-request TTFT / TPOT percentiles (per-request timing is the point —
+the old engine stamped one batch-level TTFT on everyone).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.common.config import EvictionConfig
+from repro.configs import get_smoke_config
+from repro.core.lookahead import init_lookahead_params
+from repro.models import transformer as tf
+from repro.serving import ContinuousEngine, Request, ServingEngine
+
+# Heterogeneous lengths (9 distinct values over 3 compile buckets): the
+# lockstep engine can only batch *identical* lengths, so realistic length
+# spread forces it toward batch-1 serves; the continuous engine pads to
+# buckets and keeps its decode slots full regardless.
+PROMPT_LENS = (17, 24, 31, 41, 48, 60, 75, 90, 120)
+BUCKETS = (32, 64, 128)
+MAX_NEW = 16
+BUDGET = 16
+
+
+def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int):
+    """Poisson arrivals, uniform mix over PROMPT_LENS."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    reqs = []
+    for i in range(n_requests):
+        n = int(rng.choice(PROMPT_LENS))
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, vocab, n).astype(np.int32),
+            max_new_tokens=MAX_NEW, arrival_s=float(arrivals[i])))
+    return reqs
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, arrival_s=r.arrival_s)
+            for r in reqs]
+
+
+def _metrics(reqs, wall):
+    toks = sum(len(r.out_tokens) for r in reqs)
+    ttft = np.array([r.ttft_s for r in reqs])
+    tpot = np.array([r.tpot_s for r in reqs if r.tpot_s > 0])
+    return {
+        "wall_s": wall,
+        "tok_per_s": toks / wall,
+        "ttft_mean_ms": 1e3 * ttft.mean(),
+        "ttft_p95_ms": 1e3 * np.percentile(ttft, 95),
+        "tpot_mean_ms": 1e3 * tpot.mean() if len(tpot) else 0.0,
+    }
+
+
+def run_lockstep(eng, reqs, *, max_batch=4):
+    """FCFS trace replay under the lockstep contract: serve the queue head
+    together with every *arrived* request of the same prompt length."""
+    queue = sorted(reqs, key=lambda r: r.arrival_s)
+    done = []
+    t0 = time.perf_counter()
+    while queue:
+        now = time.perf_counter() - t0
+        arrived = [r for r in queue if r.arrival_s <= now]
+        if not arrived:
+            time.sleep(max(queue[0].arrival_s - now, 0.0))
+            continue
+        head = arrived[0]
+        batch = [r for r in arrived
+                 if len(r.prompt) == len(head.prompt)][:max_batch]
+        for r in batch:
+            queue.remove(r)
+        serve_start = time.perf_counter() - t0
+        eng.serve(batch)
+        serve_end = time.perf_counter() - t0
+        for r in batch:
+            # r.ttft_s is still serve-relative here: split decode time off
+            # first, then rebase TTFT onto the trace clock (queue wait incl.)
+            decode_s = serve_end - serve_start - r.ttft_s
+            r.tpot_s = decode_s / max(len(r.out_tokens) - 1, 1)
+            r.ttft_s = serve_start + r.ttft_s - r.arrival_s
+        done += batch
+    return _metrics(done, time.perf_counter() - t0)
+
+
+def run_continuous(eng, reqs):
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    m = _metrics(done, wall)
+    m["compile_cache"] = eng.prefill_cache.stats()
+    return m
+
+
+def bench(n_requests=24, rate_hz=20.0, policy="lookaheadkv", slots=4,
+          seed=0, warmup=True, report=print):
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
+    trace = make_trace(n_requests, rate_hz, seed, cfg.vocab_size)
+    lock_eng = ServingEngine(params, cfg, policy=policy,
+                             evict=EvictionConfig(budget=BUDGET),
+                             lkv_params=lkv, max_new_tokens=MAX_NEW,
+                             eos_id=-1)
+    cont_eng = ContinuousEngine(params, cfg, policy=policy,
+                                evict=EvictionConfig(budget=BUDGET),
+                                lkv_params=lkv, num_slots=slots,
+                                buckets=BUCKETS, max_new_tokens=MAX_NEW,
+                                eos_id=-1)
+    cont_eng.warmup(PROMPT_LENS, batch_sizes=(1, 2, slots))
+    if warmup:  # one untimed replay per engine compiles every program
+        run_lockstep(lock_eng, _clone(trace))
+        run_continuous(cont_eng, _clone(trace))
+    lock = run_lockstep(lock_eng, _clone(trace))
+    cont = run_continuous(cont_eng, _clone(trace))
+    return lock, cont
+
+
+def run(report):
+    """benchmarks.run entry point."""
+    lock, cont = bench(report=report)
+    for name, m in (("lockstep", lock), ("continuous", cont)):
+        report(f"serving/{name}_tok_per_s", None, f"{m['tok_per_s']:.1f}")
+        report(f"serving/{name}_ttft_p95_ms", None, f"{m['ttft_p95_ms']:.0f}")
+    report("serving/continuous_speedup", None,
+           f"{cont['tok_per_s'] / max(lock['tok_per_s'], 1e-9):.2f}x")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--policy", default="lookaheadkv")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true")
+    args = ap.parse_args()
+    lock, cont = bench(args.requests, args.rate, args.policy, args.slots,
+                       args.seed, warmup=not args.no_warmup)
+    print(f"{'engine':12s} {'tok/s':>8s} {'ttft_ms':>9s} {'ttft_p95':>9s} "
+          f"{'tpot_ms':>8s} {'wall_s':>7s}")
+    for name, m in (("lockstep", lock), ("continuous", cont)):
+        print(f"{name:12s} {m['tok_per_s']:8.1f} {m['ttft_mean_ms']:9.1f} "
+              f"{m['ttft_p95_ms']:9.1f} {m['tpot_mean_ms']:8.2f} "
+              f"{m['wall_s']:7.2f}")
+    ratio = cont["tok_per_s"] / max(lock["tok_per_s"], 1e-9)
+    print(f"continuous/lockstep throughput: {ratio:.2f}x  "
+          f"(compile cache: {cont['compile_cache']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ SUITES = {
     "longform": "benchmarks.bench_longform",        # Fig 5 (LongProc proxy)
     "roofline": "benchmarks.bench_roofline",        # §Roofline (dry-run)
     "kernels": "benchmarks.bench_kernels",          # kernel micro-bench
+    "serving": "benchmarks.bench_serving",          # continuous vs lockstep
 }
 
 

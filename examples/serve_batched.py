@@ -1,10 +1,20 @@
-"""Batched serving with KV-cache eviction: the paper's inference path.
+"""Serving with KV-cache eviction: lockstep batches and continuous batching.
 
     PYTHONPATH=src python examples/serve_batched.py [--policy lookaheadkv]
 
-Loads (or quickly trains) lookahead modules, then serves a batch of requests
-under each policy, reporting TTFT, tokens, and the cache-shrink ratio — the
-paper's memory headline (O(n_in) -> O(budget) cache per layer/head).
+Two demos over one small model with (quickly trained) lookahead modules:
+
+1. **Policy comparison** (the paper's inference path): a same-length batch
+   served policy-by-policy through the lockstep ``ServingEngine``,
+   reporting TTFT, tokens, and the cache-shrink ratio — the paper's memory
+   headline (O(n_in) -> O(budget) cache per layer/head).
+2. **Mixed-length traffic** through the ``ContinuousEngine``: requests with
+   several distinct prompt lengths are bucketed for prefill and stream
+   through a fixed set of decode slots — retiring requests free their slot
+   for queued ones mid-stream, and every request reports its *own* TTFT
+   and TPOT.  Post-eviction caches are shape-uniform across prompt
+   lengths, which is exactly what makes slot reuse a constant-shape
+   scatter.
 """
 
 import argparse
@@ -22,7 +32,7 @@ from repro.core.lookahead import init_lookahead_params
 from repro.data import synthetic
 from repro.models import transformer as tf
 from repro.optim import adam
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import ContinuousEngine, Request, ServingEngine
 
 
 def get_or_train_lkv(cfg, params, path="experiments/ckpt/serve_lkv.npz"):
@@ -36,8 +46,6 @@ def get_or_train_lkv(cfg, params, path="experiments/ckpt/serve_lkv.npz"):
 
     @jax.jit
     def step(lkv, opt, x, xy):
-        import jax.numpy as jnp
-
         def loss_fn(l):
             return objective.lkv_loss(params, cfg, l, x, xy, x.shape[1])[0]
 
@@ -57,23 +65,10 @@ def get_or_train_lkv(cfg, params, path="experiments/ckpt/serve_lkv.npz"):
     return lkv
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="",
-                    help="single policy; default compares several")
-    ap.add_argument("--budget", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--n-in", type=int, default=96)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
-
-    cfg = get_smoke_config("smollm-135m")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    lkv = get_or_train_lkv(cfg, params)
+def compare_policies(cfg, params, lkv, args):
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, args.n_in).astype(np.int32)
                for _ in range(args.batch)]
-
     policies_to_run = ([args.policy] if args.policy else
                        ["snapkv", "streaming_llm", "lookaheadkv", "laq"])
     print(f"{'policy':15s} {'ttft_ms':>9s} {'toks/req':>9s} "
@@ -93,6 +88,58 @@ def main():
         print(f"{pol:15s} {done[0].ttft_s*1e3:9.1f} "
               f"{np.mean([len(r.out_tokens) for r in done]):9.1f} "
               f"{cb['ratio']:11.1f}x  (batch wall {wall:.2f}s)")
+
+
+def serve_mixed_traffic(cfg, params, lkv, args):
+    policy = args.policy or "lookaheadkv"
+    print(f"\n-- continuous batching: mixed-length traffic ({policy}) --")
+    rng = np.random.default_rng(1)
+    lens = rng.choice([24, 40, 56, 72, 96], size=args.requests)
+    arrivals = np.cumsum(rng.exponential(0.05, args.requests))
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(n)).astype(np.int32),
+                    max_new_tokens=args.max_new, arrival_s=float(t))
+            for i, (n, t) in enumerate(zip(lens, arrivals))]
+    eng = ContinuousEngine(params, cfg, policy=policy,
+                           evict=EvictionConfig(budget=args.budget),
+                           lkv_params=lkv, num_slots=args.slots,
+                           buckets=(32, 64, 128),
+                           max_new_tokens=args.max_new, eos_id=-1)
+    t0 = time.time()
+    done = eng.run(reqs)
+    wall = time.time() - t0
+    print(f"{'uid':>4s} {'n_in':>5s} {'slot':>4s} {'ttft_ms':>8s} "
+          f"{'tpot_ms':>8s} {'toks':>5s}")
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"{r.uid:4d} {len(r.prompt):5d} {r.slot:4d} "
+              f"{r.ttft_s*1e3:8.1f} {r.tpot_s*1e3:8.2f} "
+              f"{len(r.out_tokens):5d}")
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"{len(done)} requests / {toks} tokens in {wall:.2f}s "
+          f"({toks/wall:.1f} tok/s); compile cache "
+          f"{eng.prefill_cache.stats()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="",
+                    help="single policy; default compares several")
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--n-in", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=12,
+                    help="mixed-traffic request count")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-engine decode slots")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = get_or_train_lkv(cfg, params)
+    compare_policies(cfg, params, lkv, args)
+    serve_mixed_traffic(cfg, params, lkv, args)
 
 
 if __name__ == "__main__":

@@ -115,13 +115,24 @@ def evict_layer(
     layer_budget: Optional[jnp.ndarray] = None,
     head_budgets: Optional[jnp.ndarray] = None,  # (B, KV) Ada-KV allocation
     extra_slots: int = 0,
+    key_mask: Optional[jnp.ndarray] = None,  # (B, n_prompt) valid prompt keys
 ) -> EvictedKV:
     """Evict one layer's prompt KV down to ``capacity`` kept slots, with
-    ``extra_slots`` empty tail capacity for subsequent decode appends."""
+    ``extra_slots`` empty tail capacity for subsequent decode appends.
+
+    ``key_mask`` marks which prompt keys are real (bucketed serving pads
+    prompts to a common length): padded keys may still be *selected* when
+    capacity exceeds the true prompt length, but their cache slots come out
+    masked invalid, so decode never attends to them.
+    """
     if head_budgets is not None:
         idx, mask = select_topk_per_head(scores, capacity, head_budgets)
     else:
         idx, mask = select_topk(scores, capacity, layer_budget=layer_budget)
+    if key_mask is not None:
+        B, KV, cap = idx.shape
+        valid = jnp.broadcast_to(key_mask[:, None, :], (B, KV, key_mask.shape[-1]))
+        mask &= jnp.take_along_axis(valid, idx, axis=-1)
     ev = gather_kv(k, v, idx, mask)
     if extra_slots:
         B, _, KV, hd = k.shape

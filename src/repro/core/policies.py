@@ -37,25 +37,74 @@ class EvictionResult(NamedTuple):
     cache: dict  # budgeted decode cache
 
 
+def decode_one(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) current tokens
+    cache: dict,
+    *,
+    active: Optional[jnp.ndarray] = None,  # (B,) live-slot mask
+) -> tuple[jnp.ndarray, dict]:
+    """One greedy decode step.  Returns (next_token (B, 1), new cache).
+
+    With ``active`` (continuous batching), retired / empty slots don't
+    advance: their cache is held fixed and their token freezes, so a slot
+    can idle between retirement and the next admission without corrupting
+    its neighbours' step count.
+    """
+    logits, new_cache = tf.decode_step(params, cfg, token, cache)
+    nxt = jnp.argmax(logits, -1)[:, None].astype(token.dtype)
+    if active is not None:
+        nxt = jnp.where(active[:, None], nxt, token)
+        new_cache = tf.select_cache_slots(active, new_cache, cache)
+    return nxt, new_cache
+
+
 def greedy_decode(
     params: dict,
     cfg: ModelConfig,
     first_token: jnp.ndarray,  # (B, 1)
     cache: dict,
     steps: int,
+    *,
+    active: Optional[jnp.ndarray] = None,  # (B,) live-slot mask
 ) -> tuple[jnp.ndarray, dict]:
     """Greedy continuation.  Returns (tokens (B, steps) incl. first, cache)."""
 
     def step(carry, _):
         tok, cache = carry
-        logits, cache = tf.decode_step(params, cfg, tok, cache)
-        nxt = jnp.argmax(logits, -1)[:, None].astype(tok.dtype)
+        nxt, cache = decode_one(params, cfg, tok, cache, active=active)
         return (nxt, cache), tok[:, 0]
 
     (last, cache), toks = jax.lax.scan(
         step, (first_token, cache), None, length=steps
     )
     return jnp.moveaxis(toks, 0, 1), cache  # (B, steps)
+
+
+def decode_chunk(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) last emitted tokens
+    cache: dict,
+    steps: int,
+    *,
+    active: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """``steps`` greedy steps *after* ``token``.  Returns (last (B, 1), cache,
+    new tokens (B, steps)).  Unlike ``greedy_decode`` the emitted tokens
+    exclude the input token — the serving loop emits the prefill's first
+    token at admission and decodes the rest in chunks between admissions."""
+
+    def step(carry, _):
+        tok, cache = carry
+        nxt, cache = decode_one(params, cfg, tok, cache, active=active)
+        return (nxt, cache), nxt[:, 0]
+
+    (last, cache), toks = jax.lax.scan(
+        step, (token, cache), None, length=steps
+    )
+    return last, cache, jnp.moveaxis(toks, 0, 1)
 
 
 def sample_decode(
@@ -122,6 +171,7 @@ def run_eviction(
     extra_slots: int = 0,
     encoder_embeds: Optional[jnp.ndarray] = None,
     mrope_positions: Optional[jnp.ndarray] = None,
+    prompt_lens: Optional[jnp.ndarray] = None,  # (B,) bucket-padded prefill
 ) -> EvictionResult:
     """Prefill + evict under ``policy``; returns next-token logits and the
     budgeted decode cache."""
@@ -130,9 +180,13 @@ def run_eviction(
         res = tf.prefill(
             params, cfg, tokens, policy=policy, evict=evict,
             lkv_params=lkv_params if policy == "lookaheadkv" else None,
-            extra_slots=extra_slots, **kw,
+            extra_slots=extra_slots, prompt_lens=prompt_lens, **kw,
         )
         return EvictionResult(logits=res.logits, cache=res.cache)
+    if prompt_lens is not None:
+        raise ValueError(
+            f"{policy} (multi-pass) cannot serve bucket-padded prompts; "
+            "group its requests by exact length instead")
 
     if policy == "laq":
         # phase 1: cheap SnapKV eviction

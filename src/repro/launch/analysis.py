@@ -137,6 +137,14 @@ def memory_analysis_dict(compiled) -> dict:
         v = getattr(ma, k, None)
         if v is not None:
             out[k] = int(v)
+    if "peak_memory_in_bytes" not in out and out:
+        # older jaxlib CompiledMemoryStats lacks the attribute: the standard
+        # conservative bound is arguments + outputs + temps + code
+        out["peak_memory_in_bytes"] = sum(
+            out.get(k, 0) for k in ("argument_size_in_bytes",
+                                    "output_size_in_bytes",
+                                    "temp_size_in_bytes",
+                                    "generated_code_size_in_bytes"))
     return out
 
 

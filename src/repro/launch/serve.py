@@ -20,7 +20,7 @@ from repro.common.config import EvictionConfig
 from repro.configs import get_config, get_smoke_config
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import ContinuousEngine, Request, ServingEngine
 
 
 def main():
@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--lkv-ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve mixed-length traffic through the "
+                         "continuous-batching engine")
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -47,19 +51,35 @@ def main():
             lkv = ckpt.load(args.lkv_ckpt, like=lkv)
             print(f"loaded lookahead modules from {args.lkv_ckpt}")
 
-    eng = ServingEngine(
-        params, cfg, policy=args.policy,
-        evict=EvictionConfig(budget=args.budget, draft_len=8),
-        lkv_params=lkv, max_new_tokens=args.max_new, eos_id=-1)
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        args.n_in).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    t0 = time.time()
-    done = eng.serve(reqs)
-    wall = time.time() - t0
+    if args.continuous:
+        eng = ContinuousEngine(
+            params, cfg, policy=args.policy,
+            evict=EvictionConfig(budget=args.budget, draft_len=8),
+            lkv_params=lkv, num_slots=args.slots,
+            max_new_tokens=args.max_new, eos_id=-1)
+        lens = rng.integers(args.n_in // 2, args.n_in + 1, args.requests)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(n)).astype(np.int32),
+                        max_new_tokens=args.max_new)
+                for i, n in enumerate(lens)]
+        t0 = time.time()
+        done = eng.run(reqs)
+        wall = time.time() - t0
+    else:
+        eng = ServingEngine(
+            params, cfg, policy=args.policy,
+            evict=EvictionConfig(budget=args.budget, draft_len=8),
+            lkv_params=lkv, max_new_tokens=args.max_new, eos_id=-1)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            args.n_in).astype(np.int32),
+                        max_new_tokens=args.max_new)
+                for i in range(args.requests)]
+        t0 = time.time()
+        done = eng.serve(reqs)
+        wall = time.time() - t0
     cb = eng.cache_bytes(args.n_in)
     print(f"policy={args.policy} budget={args.budget} "
           f"requests={len(done)} ttft={done[0].ttft_s*1e3:.1f}ms "

@@ -101,16 +101,19 @@ def prefill_attention(
     lora_scale: float = 1.0,
     causal: bool = True,
     rotary: bool = True,
+    kv_mask: Optional[jnp.ndarray] = None,  # (B, S) valid-key mask
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full-sequence attention.  Returns (out, q, k, v).
 
     ``is_global`` may be a traced bool (scanned local/global flag): local
     layers apply the sliding-window mask, global layers don't.  Both cases
     share one kernel call by selecting the window value (huge = unbounded).
+    ``kv_mask`` excludes keys (bucket-padded prompt rows) from every query.
     """
     q, k, v = qkv(p, a, h, inp, lora=lora, lora_scale=lora_scale, rotary=rotary)
     window = layer_window(a, is_global) if causal else None
-    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              kv_mask=kv_mask)
     B, S = h.shape[:2]
     out = out.reshape(B, S, a.q_dim)
     out = linear(out, p["wo"], lora=_lora_for(lora, "wo"),
@@ -155,19 +158,34 @@ def decode_attention_step(
     Cache layout (leading L axis stripped by the layer scan):
         k/v: (B, C, KV, hd);  pos/mask: (B, C, KV) — *per kv head*, because
         eviction keeps different token positions per head.
+
+    ``inp.cache_cursor`` is either a scalar (lockstep serving: every sequence
+    appends at the same slot) or a (B,) vector (continuous batching: slots
+    admitted at different times carry independent write cursors; the append
+    becomes a per-sequence one-hot scatter).
     """
     cache = inp.cache
     B = h1.shape[0]
     KV = a.num_kv_heads
     q, k_new, v_new = qkv(p, a, h1, inp)
     cursor = inp.cache_cursor
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, cursor, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, cursor, 0, 0))
     new_pos = jnp.broadcast_to(inp.positions[:, :, None], (B, 1, KV))
-    pos = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (0, cursor, 0))
-    mask = jax.lax.dynamic_update_slice(
-        cache["mask"], jnp.ones((B, 1, KV), bool), (0, cursor, 0)
-    )
+    if getattr(cursor, "ndim", 0) == 1:  # per-slot cursors
+        C = cache["k"].shape[1]
+        sel = jnp.arange(C)[None, :] == jnp.clip(cursor, 0, C - 1)[:, None]
+        sel &= (cursor < C)[:, None]  # full caches stop appending
+        k = jnp.where(sel[..., None, None], k_new, cache["k"])
+        v = jnp.where(sel[..., None, None], v_new, cache["v"])
+        pos = jnp.where(sel[..., None], new_pos, cache["pos"])
+        mask = cache["mask"] | sel[..., None]
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, cursor, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, cursor, 0, 0))
+        pos = jax.lax.dynamic_update_slice(cache["pos"], new_pos,
+                                           (0, cursor, 0))
+        mask = jax.lax.dynamic_update_slice(
+            cache["mask"], jnp.ones((B, 1, KV), bool), (0, cursor, 0)
+        )
     att_mask = mask
     if window is not None:
         att_mask = mask & ((new_pos[:, :1] - pos) < window)
@@ -259,6 +277,8 @@ def decode_attention_step_evicting(
     score = cache["score"] + jnp.where(cache["mask"], add, 0.0)
 
     cursor = inp.cache_cursor
+    if getattr(cursor, "ndim", 0) == 1:  # per-slot cursors (continuous batch)
+        cursor = cursor[:, None]  # (B, 1) broadcasts against (B, KV)
     full = cursor >= C
     victim = jnp.argmin(jnp.where(cache["mask"], score, jnp.inf), axis=1)
     slot = jnp.where(full, victim, jnp.minimum(cursor, C - 1))  # (B, KV)

@@ -230,13 +230,27 @@ def prefill(
     encoder_embeds: Optional[jnp.ndarray] = None,  # whisper (B, F, D)
     want_logits: str = "last",  # "last" | "all" | "none"
     want_ssm_cache: bool = False,
+    prompt_lens: Optional[jnp.ndarray] = None,  # (B,) true lens, <= n_real
 ) -> PrefillResult:
+    """``prompt_lens`` enables bucket-padded prefill (continuous-batching
+    serving): inputs are right-padded to a shared bucket length, and every
+    consumer of the padded rows is masked — they are invalid attention keys,
+    carry zero eviction score, and never enter the decode cache.  Appended
+    observation rows take positions after each request's *true* length, so
+    the lookaheadkv scoring pass is exact under padding (its observation
+    queries are learned rows at static offsets, unlike the sliding
+    observation windows of the snapkv-family baselines, which become
+    approximate for padded requests)."""
     a = cfg.attn
     lk = cfg.lookahead
     evict = evict or EvictionConfig()
     use_lookahead_rows = (policy == "lookaheadkv") or (
         capture_scores and lkv_params is not None and gt_boundary is None
     )
+    if prompt_lens is not None:
+        assert not cfg.uses_ssm and not cfg.is_encoder_decoder, \
+            "bucket-padded prefill supports attention-only archs"
+        assert gt_boundary is None, "prompt_lens and gt_boundary are exclusive"
 
     h = embed(params, cfg, inputs)
     B, n_real = h.shape[:2]
@@ -245,7 +259,16 @@ def prefill(
         assert lkv_params is not None, "lookaheadkv needs trained modules"
         h, lookahead_mask = append_lookahead(h, lkv_params)
     S = h.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    col = jnp.arange(S)
+    positions = jnp.broadcast_to(col, (B, S))
+    key_valid = None  # (B, S) valid-key mask under bucket padding
+    if prompt_lens is not None:
+        pl = prompt_lens.astype(jnp.int32)
+        # observation rows sit right after each request's true prompt, not
+        # after the padding, so their rotary positions match unpadded prefill
+        positions = jnp.where(col[None, :] < n_real, positions,
+                              pl[:, None] + (col[None, :] - n_real))
+        key_valid = (col[None, :] < pl[:, None]) | (col[None, :] >= n_real)
     mrope = None
     if a is not None and a.mrope:
         if mrope_positions is None:
@@ -283,13 +306,13 @@ def prefill(
     adaptive_heads = (do_evict and evict.head_alloc == "adaptive"
                       and policy not in ("full",))
     if do_evict:
-        budgets, capacity = _policy_budget_schedule(
+        budgets, _ = _policy_budget_schedule(
             cfg, policy, evict.budget if policy != "full" else n_keys,
             evict.pyramid_beta,
         )
-        if adaptive_heads:
-            capacity = int(evict.budget * evict.adaptive_ceiling)
-        capacity = min(capacity, n_keys)
+        # the one source of truth for cache depth — the serving engines size
+        # their live slot caches with the same function
+        capacity = decode_cache_capacity(cfg, policy, evict, n_keys_max=n_keys)
     else:
         budgets = jnp.zeros((cfg.num_layers,), jnp.int32)
         capacity = 0
@@ -337,7 +360,7 @@ def prefill(
                 a_out, q, k, v = attn_mod.prefill_attention(
                     lp["attn"], a, u, inp, is_global=flag,
                     lora=None if lora_l is None else lora_l.get("attn"),
-                    lora_scale=ls,
+                    lora_scale=ls, kv_mask=key_valid,
                 )
                 delta = delta + a_out
             if cfg.uses_ssm:
@@ -423,15 +446,18 @@ def prefill(
             win = layer_window(a, flag)
             if obs_policy == "h2o":
                 s_qh = scoring.observation_scores(
-                    q, k, n_keys, window=win, q_offset=0
+                    q, k, n_keys, window=win, q_offset=0,
+                    kv_mask=None if key_valid is None else key_valid[:, :n_keys],
                 )
             else:
                 s_qh = scoring.observation_scores(
-                    q[:, boundary:], k, boundary, window=win
+                    q[:, boundary:], k, boundary, window=win,
+                    kv_mask=None if key_valid is None else key_valid[:, :boundary],
                 )
             if capture_scores:
                 ys["scores"] = s_qh
         if do_evict and cfg.uses_attention:
+            prompt_valid = None if key_valid is None else key_valid[:, :n_keys]
             if policy in OBS_POLICIES:
                 s_kv = scoring.postprocess(
                     s_qh, a.num_kv_heads, lk.pool_kernel if lk else 7
@@ -446,13 +472,20 @@ def prefill(
                 s_kv = ev.position_scores(
                     policy, n_keys, B, a.num_kv_heads, sink=evict.sink
                 )
+            if prompt_valid is not None:
+                # padded keys rank last (max-pool may have bled real-neighbour
+                # mass into them) and are masked out of the cache regardless
+                s_kv = jnp.where(prompt_valid[:, None, :], s_kv, -1e30)
             hb = None
             if adaptive_heads:
-                hb = ev.adaptive_head_budgets(s_kv, evict.budget, capacity)
+                # -1e30 pad sentinels would corrupt the head-mass totals
+                s_mass = s_kv if prompt_valid is None else jnp.maximum(s_kv, 0.0)
+                hb = ev.adaptive_head_budgets(s_mass, evict.budget, capacity)
             cache_l = ev.evict_layer(
                 s_kv, k[:, :n_keys], v[:, :n_keys], capacity,
                 layer_budget=None if adaptive_heads else x.get("budget"),
                 head_budgets=hb, extra_slots=extra_slots,
+                key_mask=prompt_valid,
             )
             ys["cache"] = dict(cache_l._asdict())
         return h, ys
@@ -475,15 +508,21 @@ def prefill(
                 cache["cross"] = ys["cross_cache"]
             else:
                 cache["cross"] = {"k": xs["ck"], "v": xs["cv"]}
-        next_pos = gt_boundary if gt_boundary is not None else n_real
-        cache["next_pos"] = jnp.full((B, 1), next_pos, jnp.int32)
+        if prompt_lens is not None:
+            cache["next_pos"] = pl[:, None]
+        else:
+            next_pos = gt_boundary if gt_boundary is not None else n_real
+            cache["next_pos"] = jnp.full((B, 1), next_pos, jnp.int32)
 
     logits = None
     if want_logits == "last":
         # for GT/draft-scoring passes the "current" position is the X|Y
         # boundary, not the end of the appended observation rows
-        row = (gt_boundary if gt_boundary is not None else n_real) - 1
-        logits = unembed(params, cfg, h[:, row])
+        if prompt_lens is not None:  # last *real* row per request
+            logits = unembed(params, cfg, h[jnp.arange(B), pl - 1])
+        else:
+            row = (gt_boundary if gt_boundary is not None else n_real) - 1
+            logits = unembed(params, cfg, h[:, row])
     elif want_logits == "all":
         logits = unembed(params, cfg, h[:, :n_real])
     return PrefillResult(logits=logits, cache=cache, scores=scores, aux=aux)
@@ -496,11 +535,15 @@ def prefill(
 
 def init_decode_cache(
     cfg: ModelConfig, batch: int, capacity: int, *, fill_len: int = 0,
-    hot_slots: int = 0,
+    hot_slots: int = 0, per_slot_cursor: bool = False,
 ) -> dict:
     """Fresh cache pytree (used directly and via jax.eval_shape for the
     dry-run ShapeDtypeStructs).  ``fill_len`` marks the first slots valid —
-    decode-shape dry-runs model a cache already holding ``seq_len`` tokens."""
+    decode-shape dry-runs model a cache already holding ``seq_len`` tokens.
+
+    ``per_slot_cursor`` gives every batch row (serving slot) its own append
+    cursor — the continuous-batching layout where slots admit and retire
+    requests independently."""
     dtype = jnp.dtype(cfg.dtype)
     L = cfg.num_layers
     cache: dict = {}
@@ -519,8 +562,13 @@ def init_decode_cache(
                 valid[None, None, :, None], (L, batch, capacity, KV)
             ),
         }
-        cache["cursor"] = jnp.asarray(fill_len, jnp.int32)
+        cache["cursor"] = (
+            jnp.full((batch,), fill_len, jnp.int32) if per_slot_cursor
+            else jnp.asarray(fill_len, jnp.int32)
+        )
         if hot_slots:
+            assert not per_slot_cursor, \
+                "split-cache decode uses the shared hot-ring counter"
             # split-cache decode: frozen prompt cache + replicated hot ring
             cache["attn"]["hot_k"] = jnp.zeros((L, batch, hot_slots, KV, hd),
                                                dtype)
@@ -558,6 +606,126 @@ def add_decode_eviction_scores(cache: dict) -> dict:
     out = dict(cache)
     out["attn"] = attn
     return out
+
+
+# ---------------------------------------------------------------------------
+# Slot-cache surgery (continuous-batching serving)
+# ---------------------------------------------------------------------------
+#
+# Post-eviction decode caches are shape-uniform across prompt lengths — every
+# request's cache is (budget + margin) slots regardless of n_in.  That is the
+# property the continuous-batching engine exploits: a freshly prefilled
+# request's cache pytree can be scattered into any free slot of the live
+# slot-batched cache, mid-stream, without reshaping anything.
+
+_SLOT_AXIS_0 = ("next_pos", "cursor")  # every other top-level group is (L, B, …)
+
+
+def _slot_axis(path) -> int:
+    top = None
+    for p in path:
+        if hasattr(p, "key"):
+            top = str(p.key)
+            break
+    return 0 if top in _SLOT_AXIS_0 else 1
+
+
+def decode_cache_capacity(cfg: ModelConfig, policy: str,
+                          evict: EvictionConfig, *, n_keys_max: int) -> int:
+    """Static kept-slot capacity of the decode cache that a prefill under
+    ``policy`` produces for prompts up to ``n_keys_max`` tokens — the
+    shape-uniformity contract the slot scheduler relies on."""
+    _, capacity = _policy_budget_schedule(
+        cfg, policy, evict.budget if policy != "full" else n_keys_max,
+        evict.pyramid_beta,
+    )
+    if evict.head_alloc == "adaptive" and policy not in ("full",):
+        capacity = int(evict.budget * evict.adaptive_ceiling)
+    return min(capacity, n_keys_max)
+
+
+def pad_cache_capacity(cache: dict, capacity: int) -> dict:
+    """Right-pad the attention slot axis to ``capacity`` (mask=False): small
+    buckets clamp the kept capacity below the budget, so their caches are
+    shallower — padding restores the uniform live-cache shape."""
+    attn = cache.get("attn")
+    if attn is None:
+        return cache
+    C = attn["k"].shape[2]
+    if C == capacity:
+        return cache
+    assert C < capacity, f"cache deeper ({C}) than live capacity ({capacity})"
+    padded = {}
+    for name, leaf in attn.items():
+        if name.startswith("hot_"):
+            padded[name] = leaf
+            continue
+        width = [(0, 0)] * leaf.ndim
+        width[2] = (0, capacity - C)
+        padded[name] = jnp.pad(leaf, width)
+    out = dict(cache)
+    out["attn"] = padded
+    return out
+
+
+def insert_request_cache(live: dict, req: dict, slot) -> dict:
+    """Scatter a batch-1 request cache (from a bucketed prefill) into slot
+    ``slot`` of the live slot-batched cache.  The request cache is
+    capacity-padded first; its scalar cursor lands in the live per-slot
+    cursor vector.  ``slot`` may be traced (the insert jits cleanly)."""
+    if "attn" in live:
+        req = pad_cache_capacity(req, live["attn"]["k"].shape[2])
+
+    def ins(path, lv, rv):
+        return jax.lax.dynamic_update_slice_in_dim(
+            lv, rv.astype(lv.dtype), slot, axis=_slot_axis(path))
+
+    out = jax.tree_util.tree_map_with_path(
+        ins,
+        {k: v for k, v in live.items() if k != "cursor"},
+        {k: v for k, v in req.items() if k != "cursor"},
+    )
+    if "cursor" in live:
+        out["cursor"] = jax.lax.dynamic_update_slice(
+            live["cursor"],
+            jnp.reshape(req["cursor"], (1,)).astype(live["cursor"].dtype),
+            (slot,),
+        )
+    return out
+
+
+def extract_request_cache(live: dict, slot) -> dict:
+    """Slice slot ``slot`` back out as a batch-1 request cache — the inverse
+    of ``insert_request_cache`` up to capacity padding."""
+
+    def ext(path, lv):
+        return jax.lax.dynamic_slice_in_dim(lv, slot, 1,
+                                            axis=_slot_axis(path))
+
+    out = jax.tree_util.tree_map_with_path(
+        ext, {k: v for k, v in live.items() if k != "cursor"})
+    if "cursor" in live:
+        cur = live["cursor"]
+        out["cursor"] = (jax.lax.dynamic_slice(cur, (slot,), (1,))
+                         if cur.ndim else cur)
+    return out
+
+
+def select_cache_slots(active: jnp.ndarray, new_cache: dict,
+                       old_cache: dict) -> dict:
+    """Per-slot select between two structurally identical decode caches:
+    slot b advances to ``new_cache`` where ``active[b]``, else keeps
+    ``old_cache`` — retired / empty slots don't advance even though decode
+    computes over the full slot batch."""
+
+    def sel(path, new_leaf, old_leaf):
+        if old_leaf.ndim == 0:  # legacy shared scalar cursor
+            return new_leaf
+        shape = [1] * new_leaf.ndim
+        shape[_slot_axis(path)] = active.shape[0]
+        return jnp.where(active.reshape(shape), new_leaf, old_leaf)
+
+    return jax.tree_util.tree_map_with_path(sel, new_cache, old_cache)
 
 
 def decode_step(

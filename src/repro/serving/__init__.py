@@ -1,0 +1,18 @@
+"""Serving subsystem: lockstep and continuous-batching engines.
+
+    scheduler.py — request state machine, FCFS queue, fixed decode slots
+    batching.py  — prompt-length buckets + the jit compile cache
+    engine.py    — ServingEngine (lockstep) and ContinuousEngine
+"""
+
+from repro.serving.batching import (DEFAULT_BUCKETS, PrefillCompileCache,
+                                    batch_bucket, bucket_for, pad_to_bucket)
+from repro.serving.engine import (ContinuousEngine, Request, RequestState,
+                                  ServingEngine, cache_bytes)
+from repro.serving.scheduler import SlotScheduler
+
+__all__ = [
+    "ContinuousEngine", "DEFAULT_BUCKETS", "PrefillCompileCache", "Request",
+    "RequestState", "ServingEngine", "SlotScheduler", "batch_bucket",
+    "bucket_for", "cache_bytes", "pad_to_bucket",
+]

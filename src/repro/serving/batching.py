@@ -1,0 +1,107 @@
+"""Prompt-length bucketing and the bucketed jit compile cache.
+
+Serving traffic has arbitrary prompt lengths; XLA programs have static
+shapes.  The bridge is a small set of *buckets*: prompts are right-padded
+to the nearest bucket and prefill programs are compiled once per
+``(bucket, batch, policy, padded)`` key.  Batch sizes are bucketed to
+powers of two for the same reason — a 3-request admission group runs the
+batch-4 program with one dummy row rather than compiling a batch-3 one.
+
+``PrefillCompileCache`` is deliberately explicit (rather than leaning on
+``jax.jit``'s internal shape cache): keys can be warmed ahead of traffic,
+and hit/miss/compile counts are observable — recompiles in the serving
+hot path are a bug, and this makes them visible.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024)
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest configured bucket >= n; beyond the largest, the next power
+    of two (the compile cache keeps working for outlier prompts)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return next_pow2(n)
+
+
+def batch_bucket(n: int, cap: int) -> int:
+    """Compile batch size for an n-request group: next power of two, capped."""
+    assert n > 0 and cap > 0
+    return min(next_pow2(n), cap)
+
+
+def pad_to_bucket(
+    prompts: list, bucket: int, batch: int, *, pad_id: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Right-pad prompts to ``bucket`` and the group to ``batch`` rows.
+
+    Returns (tokens (batch, bucket) int32, lens (batch,) int32).  Dummy
+    rows carry lens == bucket so they take the unmasked fast path; their
+    outputs are discarded by the caller.
+    """
+    assert len(prompts) <= batch
+    tokens = np.full((batch, bucket), pad_id, np.int32)
+    lens = np.full((batch,), bucket, np.int32)
+    for i, p in enumerate(prompts):
+        n = len(p)
+        assert n <= bucket, f"prompt len {n} exceeds bucket {bucket}"
+        tokens[i, :n] = p
+        lens[i] = n
+    return tokens, lens
+
+
+class PrefillCompileCache:
+    """jit compile cache keyed on ``(bucket, batch, policy, padded)``.
+
+    ``build(policy, padded)`` returns the python callable to jit; the
+    ``padded`` variant threads per-request ``prompt_lens`` masking through
+    prefill, the exact variant skips it (keeping the maskless kernel fast
+    path when every prompt in the group fills its bucket exactly).
+    """
+
+    def __init__(self, build: Callable[[str, bool], Callable]):
+        self._build = build
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, bucket: int, batch: int, policy: str, padded: bool):
+        key = (bucket, batch, policy, padded)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = jax.jit(self._build(policy, padded))
+            self._fns[key] = fn
+        else:
+            self.hits += 1
+        return fn
+
+    def warm(self, keys) -> None:
+        """Pre-instantiate jit wrappers for (bucket, batch, policy, padded)
+        keys (compilation itself still happens on first call)."""
+        for key in keys:
+            if key not in self._fns:
+                self._fns[key] = jax.jit(self._build(key[2], key[3]))
+
+    @property
+    def keys(self):
+        return sorted(self._fns)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._fns), "hits": self.hits,
+                "misses": self.misses}

@@ -1,16 +1,27 @@
-"""Batched serving engine: prefill → evict → decode with a budgeted cache.
+"""Serving engines: lockstep (paper-shaped) and continuous batching.
 
-A deliberately compact production shape: fixed-size request slots (static
-shapes => one compiled program per (batch, n_in) bucket), per-policy jit'd
-prefill and a jit'd decode loop.  The cache the decoder sees is *only* the
-evicted budget cache — this is where the paper's memory win materializes:
-cache bytes drop from O(n_in) to O(budget + max_new_tokens) per layer/head.
+``ServingEngine`` is the original compact shape: one same-length batch at a
+time, prefill and decode in lockstep.  ``ContinuousEngine`` decouples the
+two phases behind a slot scheduler (scheduler.py) and a bucketed compile
+cache (batching.py):
+
+    arrivals ──> FCFS queue ──> per-bucket prefill ──> decode slots
+                                   (pad-to-bucket,       (one slot-batched
+                                    compile cache)        chunked loop)
+
+Finished requests retire and queued requests are inserted into the freed
+slots mid-stream.  This is enabled precisely by the paper's eviction: every
+request's post-eviction decode cache has the same static shape
+``(budget_capacity + margin)`` regardless of its original prompt length, so
+a freshly prefilled request's cache pytree can be scattered into the live
+decode cache (``transformer.insert_request_cache``) without reshaping —
+cache bytes stay O(budget), and the decode batch stays full under
+heterogeneous traffic.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -20,26 +31,37 @@ import numpy as np
 from repro.common.config import EvictionConfig, ModelConfig
 from repro.core import policies
 from repro.models import transformer as tf
+from repro.serving.batching import (DEFAULT_BUCKETS, PrefillCompileCache,
+                                    batch_bucket, bucket_for, pad_to_bucket)
+from repro.serving.scheduler import Request, RequestState, SlotScheduler
+
+__all__ = ["Request", "RequestState", "ServingEngine", "ContinuousEngine",
+           "cache_bytes"]
 
 
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (n_in,) int32
-    max_new_tokens: int
-    out_tokens: list = field(default_factory=list)
-    ttft_s: float = 0.0
-    done: bool = False
+def cache_bytes(cfg: ModelConfig, capacity: int, n_in: int) -> dict:
+    """Analytic cache footprint: full vs evicted (the paper's headline)."""
+    if cfg.attn is None:
+        return {"full": 0, "evicted": 0, "ratio": 1.0}
+    per_tok = cfg.num_layers * cfg.attn.kv_dim * 2 * 2  # K+V, bf16
+    return {
+        "full": n_in * per_tok,
+        "evicted": capacity * per_tok,
+        "ratio": n_in / max(capacity, 1),
+    }
 
 
 class ServingEngine:
+    """Lockstep batch engine: every request in a batch shares one prompt
+    length, and prefill/decode run back-to-back for the whole batch."""
+
     def __init__(
         self,
         params: dict,
         cfg: ModelConfig,
         *,
         policy: str = "lookaheadkv",
-        evict: EvictionConfig = EvictionConfig(),
+        evict: Optional[EvictionConfig] = None,
         lkv_params: Optional[dict] = None,
         draft_params: Optional[dict] = None,
         draft_cfg: Optional[ModelConfig] = None,
@@ -48,7 +70,8 @@ class ServingEngine:
         decode_evict: bool = False,
     ):
         self.params, self.cfg = params, cfg
-        self.policy, self.evict = policy, evict
+        self.policy = policy
+        self.evict = evict if evict is not None else EvictionConfig()
         self.lkv_params = lkv_params
         self.draft_params, self.draft_cfg = draft_params, draft_cfg
         self.max_new_tokens = max_new_tokens
@@ -69,8 +92,6 @@ class ServingEngine:
             draft_cfg=self.draft_cfg, extra_slots=self.decode_margin,
         )
         if self.decode_evict:
-            from repro.models import transformer as tf
-
             res = res._replace(cache=tf.add_decode_eviction_scores(res.cache))
         return res
 
@@ -81,7 +102,12 @@ class ServingEngine:
 
     # -- public API ----------------------------------------------------------
     def serve(self, requests: list[Request]) -> list[Request]:
-        """Serve a batch of same-length requests."""
+        """Serve a batch of same-length requests.
+
+        ``ttft_s`` here is *batch-level by construction* — all requests
+        prefill together, so they share one first-token time.  Per-request
+        TTFT under mixed traffic is what ``ContinuousEngine`` reports.
+        """
         assert requests, "empty batch"
         n_in = len(requests[0].prompt)
         assert all(len(r.prompt) == n_in for r in requests), \
@@ -100,19 +126,243 @@ class ServingEngine:
                 seq = seq[: seq.index(self.eos_id) + 1]
             r.out_tokens = seq
             r.ttft_s = ttft
+            r.first_token_s = ttft
             r.done = True
+            r.state = RequestState.DONE
         return requests
 
     def cache_bytes(self, n_in: int) -> dict:
-        """Analytic cache footprint: full vs evicted (the paper's headline)."""
-        cfg = self.cfg
-        if cfg.attn is None:
-            return {"full": 0, "evicted": 0, "ratio": 1.0}
-        a = cfg.attn
-        per_tok = cfg.num_layers * a.kv_dim * 2 * 2  # K+V, bf16
         cap = self.evict.budget + self.decode_margin
-        return {
-            "full": n_in * per_tok,
-            "evicted": cap * per_tok,
-            "ratio": n_in / max(cap, 1),
-        }
+        return cache_bytes(self.cfg, cap, n_in)
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: a slot-batched decode loop with
+    per-bucket prefill and mid-stream admission/retirement.
+
+    The decode loop runs in *chunks* (a jitted ``lax.scan`` of 1/2/4/…
+    steps with a per-slot active mask) so host dispatch is amortized while
+    admission latency stays bounded; chunk length tracks the *longest*
+    remaining token budget among live slots, so a nearly-finished slot may
+    overshoot its budget inside a chunk — the surplus tokens are truncated
+    at collect time (greedy decode is prefix-stable, so truncation never
+    changes the kept tokens) and the slot retires at the chunk boundary.
+
+    Exactness: tokens match isolated lockstep serving bit-for-bit for
+    ``lookaheadkv`` and the position policies even when prompts are padded
+    to their bucket (padded rows are masked everywhere — see
+    ``transformer.prefill``'s ``prompt_lens``).  The snapkv-family
+    baselines are exact when a prompt fills its bucket and approximate
+    otherwise (their sliding observation windows overlap the padding).
+    Multi-pass policies (laq/speckv) are grouped by exact prompt length
+    instead of bucketed.
+    """
+
+    #: decode chunk lengths we are willing to compile
+    _CHUNK_SIZES = (1, 2, 4, 8, 16)
+
+    def __init__(
+        self,
+        params: dict,
+        cfg: ModelConfig,
+        *,
+        policy: str = "lookaheadkv",
+        evict: Optional[EvictionConfig] = None,
+        lkv_params: Optional[dict] = None,
+        draft_params: Optional[dict] = None,
+        draft_cfg: Optional[ModelConfig] = None,
+        num_slots: int = 4,
+        buckets: tuple = DEFAULT_BUCKETS,
+        max_prefill_batch: Optional[int] = None,
+        max_new_tokens: int = 64,  # per-request cap (sizes the cache margin)
+        eos_id: int = 0,
+        decode_evict: bool = False,
+        decode_chunk: int = 8,
+    ):
+        assert cfg.uses_attention and not cfg.uses_ssm \
+            and not cfg.is_encoder_decoder, \
+            "continuous batching serves attention-only archs"
+        assert policy != "gt_oracle", "gt_oracle needs the future; not servable"
+        self.params, self.cfg = params, cfg
+        self.policy = policy
+        self.evict = evict if evict is not None else EvictionConfig()
+        self.lkv_params = lkv_params
+        self.draft_params, self.draft_cfg = draft_params, draft_cfg
+        self.num_slots = num_slots
+        self.buckets = tuple(sorted(buckets))
+        self.max_prefill_batch = max_prefill_batch or num_slots
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+        self.decode_evict = decode_evict
+        self.decode_margin = (8 if decode_evict else max_new_tokens + 1)
+        self._chunks = tuple(c for c in self._CHUNK_SIZES if c <= decode_chunk)
+        # multi-pass policies draft with the compressed cache; their prefill
+        # can't mask padding, so their groups use exact prompt lengths
+        self._exact_only = policy in policies.MULTI_PASS
+        self.capacity = tf.decode_cache_capacity(
+            cfg, policy, self.evict, n_keys_max=max(self.buckets))
+        self.prefill_cache = PrefillCompileCache(self._build_prefill)
+        self._decode_fns: dict = {}
+        self._insert_fn = jax.jit(tf.insert_request_cache)
+
+    # -- compile-cache bodies ------------------------------------------------
+    def _build_prefill(self, policy: str, padded: bool):
+        def fn(params, lkv, tokens, lens):
+            res = policies.run_eviction(
+                policy, params, self.cfg, tokens, evict=self.evict,
+                lkv_params=lkv, draft_params=self.draft_params,
+                draft_cfg=self.draft_cfg, extra_slots=self.decode_margin,
+                prompt_lens=lens if padded else None,
+            )
+            if self.decode_evict:
+                res = res._replace(
+                    cache=tf.add_decode_eviction_scores(res.cache))
+            return res
+
+        return fn
+
+    def _decode_fn(self, steps: int):
+        fn = self._decode_fns.get(steps)
+        if fn is None:
+            def body(params, tok, cache, active):
+                return policies.decode_chunk(
+                    params, self.cfg, tok, cache, steps, active=active)
+
+            fn = jax.jit(body)
+            self._decode_fns[steps] = fn
+        return fn
+
+    # -- geometry ------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        if self._exact_only:
+            return n
+        b = bucket_for(n, self.buckets)
+        if self.policy == "full" and b > max(self.buckets):
+            raise ValueError(
+                f"policy 'full' caches whole prompts; len {n} exceeds the "
+                f"largest bucket {max(self.buckets)}")
+        return b
+
+    def cache_bytes(self, n_in: int) -> dict:
+        return cache_bytes(self.cfg, self.capacity + self.decode_margin, n_in)
+
+    def warmup(self, prompt_lens, batch_sizes=(1,)) -> None:
+        """Pre-build compile-cache entries for expected traffic shapes."""
+        keys = []
+        for n in prompt_lens:
+            b = self._bucket(n)
+            for nb in batch_sizes:
+                nb = batch_bucket(nb, self.max_prefill_batch)
+                keys.append((b, nb, self.policy, n != b))
+        self.prefill_cache.warm(keys)
+
+    # -- serving loop --------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve ``requests`` to completion; returns them in finish order.
+
+        ``arrival_s`` offsets are interpreted on the wall clock relative to
+        the start of the call: a request is schedulable once the engine
+        clock passes its arrival.  All timing fields (``ttft_s``,
+        ``tpot_s``, ``finish_s``) are per-request, measured on that clock.
+        """
+        sched = SlotScheduler(self.num_slots, bucket_for=self._bucket,
+                              max_prefill_batch=self.max_prefill_batch)
+        for r in requests:
+            assert r.max_new_tokens <= self.max_new_tokens, \
+                "request exceeds the engine's max_new_tokens cache margin"
+            sched.submit(r)
+        t0 = time.perf_counter()
+        live = tf.init_decode_cache(self.cfg, self.num_slots,
+                                    self.capacity + self.decode_margin,
+                                    per_slot_cursor=True)
+        if self.decode_evict:
+            live = tf.add_decode_eviction_scores(live)
+        tok = jnp.zeros((self.num_slots, 1), jnp.int32)
+        active = np.zeros(self.num_slots, bool)
+        remaining = np.zeros(self.num_slots, np.int64)
+
+        while sched.has_work():
+            # admission: fill freed slots from the queue, one bucket group
+            # per prefill program.  ``now`` refreshes inside the loop so
+            # requests that arrived during a (multi-second, possibly
+            # compile-including) prefill are admissible immediately.
+            while True:
+                now = time.perf_counter() - t0
+                group = sched.next_prefill_group(now)
+                if not group:
+                    break
+                tok, live = self._admit(group, sched, tok, live, active,
+                                        remaining, t0)
+            if active.any():
+                steps = self._pick_chunk(remaining, active)
+                fn = self._decode_fn(steps)
+                tok, live, toks = fn(self.params, tok, live,
+                                     jnp.asarray(active))
+                self._collect(np.asarray(toks), steps, sched, active,
+                              remaining, t0)
+            else:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break  # defensive: nothing queued, nothing running
+                wait = nxt - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        return sched.finished
+
+    # -- internals -----------------------------------------------------------
+    def _pick_chunk(self, remaining, active) -> int:
+        """Largest configured chunk no bigger than the *longest* remaining
+        stream: slots that finish mid-chunk simply have their surplus tokens
+        truncated at collect time (greedy decode makes outputs prefix-stable,
+        so overshoot wastes a few slot-steps but never changes tokens), which
+        keeps the host-dispatch count low near retirements."""
+        room = max(int(remaining[active].max()), 1)
+        steps = 1
+        for c in self._chunks:
+            if c <= room:
+                steps = c
+        return steps
+
+    def _admit(self, group, sched, tok, live, active, remaining, t0):
+        lens = [len(r.prompt) for r in group]
+        bucket = self._bucket(max(lens))
+        padded = any(n != bucket for n in lens)
+        nb = batch_bucket(len(group), self.max_prefill_batch)
+        tokens, lens_arr = pad_to_bucket([r.prompt for r in group], bucket, nb)
+        fn = self.prefill_cache.get(bucket, nb, self.policy, padded)
+        res = fn(self.params, self.lkv_params, jnp.asarray(tokens),
+                 jnp.asarray(lens_arr))
+        res.logits.block_until_ready()
+        now = time.perf_counter() - t0
+        first = np.asarray(jnp.argmax(res.logits, -1).astype(jnp.int32))
+        for i, r in enumerate(group):
+            slot = sched.place(r)
+            req_cache = tf.extract_request_cache(res.cache, i)
+            live = self._insert_fn(live, req_cache, slot)
+            tok = tok.at[slot, 0].set(int(first[i]))
+            r.out_tokens = [int(first[i])]
+            r.first_token_s = now
+            r.ttft_s = now - r.enqueue_s
+            if r.out_tokens[-1] == self.eos_id or r.max_new_tokens <= 1:
+                sched.retire(r, now=now)
+                active[slot] = False
+            else:
+                active[slot] = True
+                remaining[slot] = r.max_new_tokens - 1
+        return tok, live
+
+    def _collect(self, toks, steps, sched, active, remaining, t0):
+        now = time.perf_counter() - t0
+        for slot in np.nonzero(active)[0]:
+            r = sched.running[slot]
+            take = min(steps, int(remaining[slot]))  # drop overshoot tokens
+            finished = False
+            for t in toks[slot, :take].tolist():
+                r.out_tokens.append(int(t))
+                if int(t) == self.eos_id:
+                    finished = True
+                    break
+            remaining[slot] -= steps
+            if finished or remaining[slot] <= 0:
+                sched.retire(r, now=now)
+                active[slot] = False

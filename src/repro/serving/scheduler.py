@@ -1,0 +1,137 @@
+"""Request-level scheduling for continuous-batching serving.
+
+The scheduler owns everything *about requests* and nothing about tensors:
+a FCFS arrival queue, a fixed set of decode slots, and the per-request
+state machine
+
+    QUEUED ──admit──> PREFILL ──place──> DECODE ──retire──> DONE
+
+``ContinuousEngine`` (engine.py) drives it: it asks for the next
+admissible prefill group (same-bucket requests, bounded by free slots),
+places each prefilled request into a freed slot, and retires requests as
+they hit EOS or their token budget — queued requests flow into freed
+slots mid-stream, so one long prompt no longer stalls a whole batch.
+
+Timing is per-request (this is where the old engine's batch-level
+``ttft_s`` stamp is fixed): TTFT is measured from the moment a request
+becomes schedulable (its arrival) to its first emitted token, and TPOT is
+the mean inter-token time after the first.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class RequestState(str, Enum):
+    QUEUED = "queued"      # submitted (possibly not yet arrived)
+    PREFILL = "prefill"    # pulled into a prefill micro-batch
+    DECODE = "decode"      # occupying a decode slot
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (n_in,) int32
+    max_new_tokens: int
+    out_tokens: list = field(default_factory=list)
+    ttft_s: float = 0.0
+    done: bool = False
+    # -- continuous-batching fields ------------------------------------
+    arrival_s: float = 0.0  # trace-clock offset at which the request arrives
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    enqueue_s: float = 0.0  # engine clock when the request became schedulable
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    tpot_s: float = 0.0  # mean seconds per output token after the first
+
+
+class SlotScheduler:
+    """Fixed decode slots + FCFS arrival queue with bucket-grouped admission.
+
+    ``bucket_for`` maps a prompt length to its compile bucket; an admission
+    group is the queue head plus every other *arrived* request sharing the
+    head's bucket, capped by free slots and ``max_prefill_batch`` — so one
+    prefill program serves the whole group.
+    """
+
+    def __init__(
+        self,
+        num_slots: int,
+        *,
+        bucket_for: Callable[[int], int],
+        max_prefill_batch: Optional[int] = None,
+    ):
+        assert num_slots > 0
+        self.num_slots = num_slots
+        self._bucket_for = bucket_for
+        self.max_prefill_batch = max_prefill_batch or num_slots
+        self._pending: list[Request] = []  # submitted, arrival in the future
+        self._queue: list[Request] = []  # arrived, awaiting admission (FCFS)
+        self._free: list[int] = list(range(num_slots - 1, -1, -1))
+        self.running: dict[int, Request] = {}
+        self.finished: list[Request] = []
+
+    # -- intake ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.QUEUED
+        req.enqueue_s = req.arrival_s
+        self._pending.append(req)
+        self._pending.sort(key=lambda r: r.arrival_s)
+
+    def poll_arrivals(self, now: float) -> None:
+        while self._pending and self._pending[0].arrival_s <= now:
+            self._queue.append(self._pending.pop(0))
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0].arrival_s if self._pending else None
+
+    # -- state ----------------------------------------------------------
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self._pending or self._queue or self.running)
+
+    # -- admission / retirement ------------------------------------------
+    def next_prefill_group(self, now: float) -> Optional[list[Request]]:
+        """The next same-bucket admission group, or None if nothing is
+        admissible (no arrived requests, or no free slot)."""
+        self.poll_arrivals(now)
+        if not self._queue or not self._free:
+            return None
+        cap = min(len(self._free), self.max_prefill_batch)
+        head_bucket = self._bucket_for(len(self._queue[0].prompt))
+        group = [r for r in self._queue
+                 if self._bucket_for(len(r.prompt)) == head_bucket][:cap]
+        for r in group:
+            self._queue.remove(r)
+            r.state = RequestState.PREFILL
+        return group
+
+    def place(self, req: Request) -> int:
+        slot = self._free.pop()
+        req.slot = slot
+        req.state = RequestState.DECODE
+        self.running[slot] = req
+        return slot
+
+    def retire(self, req: Request, *, now: float) -> int:
+        """Free the request's slot; returns it for the engine to reuse."""
+        slot = req.slot
+        del self.running[slot]
+        self._free.append(slot)
+        req.state = RequestState.DONE
+        req.done = True
+        req.finish_s = now
+        n = len(req.out_tokens)
+        if req.first_token_s is not None and n > 1:
+            req.tpot_s = (now - req.first_token_s) / (n - 1)
+        self.finished.append(req)
+        return slot

@@ -111,6 +111,43 @@ def test_lookahead_score_matches_oracle(case):
     np.testing.assert_allclose(got2, want, atol=1e-5, rtol=1e-3)
 
 
+def test_decode_attention_fully_masked_rows_finite():
+    """A retired serving slot carries an all-False cache mask; the kernel
+    must return finite output for such rows (the slot's result is discarded
+    but NaNs would poison the whole batched step)."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 3)
+    B, S, KV, G, hd = 2, 96, 2, 2, 16
+    q = jax.random.normal(ks[0], (B, KV * G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    mask = jnp.ones((B, S), bool).at[0].set(False)  # row 0 fully masked
+    got = decode_attention_pallas(q, k, v, kv_mask=mask, block_k=32,
+                                  interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_array_equal(np.asarray(got[0]), 0.0)
+    # the live row is unaffected by its dead neighbour
+    want = ref.decode_attention(q[1:], k[1:], v[1:], kv_mask=mask[1:])
+    np.testing.assert_allclose(got[1:], want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("sk,bk", [(100, 32), (7, 16), (130, 64), (33, 32)])
+def test_decode_attention_unaligned_seq_parity(sk, bk):
+    """Sk % block_k != 0: the kernel's tail padding must not leak into the
+    output (serving caches are budget+margin long — rarely block-aligned)."""
+    key = jax.random.PRNGKey(12)
+    ks = jax.random.split(key, 4)
+    B, KV, G, hd = 2, 2, 3, 16
+    q = jax.random.normal(ks[0], (B, KV * G, hd))
+    k = jax.random.normal(ks[1], (B, sk, KV, hd))
+    v = jax.random.normal(ks[2], (B, sk, KV, hd))
+    mask = jax.random.bernoulli(ks[3], 0.7, (B, sk)).at[:, 0].set(True)
+    got = decode_attention_pallas(q, k, v, kv_mask=mask,
+                                  block_k=min(bk, sk), interpret=True)
+    want = ref.decode_attention(q, k, v, kv_mask=mask)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
 def test_lookahead_score_rows_sum_below_one():
     """Each obs row's prompt mass is < 1 (softmax includes obs keys)."""
     key = jax.random.PRNGKey(5)
