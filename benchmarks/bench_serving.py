@@ -1,30 +1,37 @@
-"""Serving benchmark: continuous batching vs the lockstep engine on a
-Poisson mixed-length trace.
+"""Serving benchmark: chunked vs bucketed continuous batching (and the
+lockstep baseline) on Poisson traces, including a long-tail trace.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving [--requests 24]
+    PYTHONPATH=src python -m benchmarks.bench_serving [--long-tail]
+    PYTHONPATH=src python -m benchmarks.bench_serving --long-tail \
+        --long-len 8192 --n-long 2
 
-One trace, two engines.  Requests arrive with exponential interarrival
-times and prompt lengths drawn from three distinct buckets; both engines
-replay the same trace FCFS:
+One trace, replayed FCFS through each engine:
 
-* **lockstep** (the seed engine's contract): a batch must share one prompt
-  length, and prefill+decode run to completion before the next batch — it
-  can only batch same-length requests that have *already arrived*, so
-  mixed traffic degenerates toward batch-1 serves and queued requests wait
-  behind whole decode runs.
-* **continuous**: bucketed prefill feeds fixed decode slots; finished
-  requests retire mid-stream and queued requests take their slots, so the
-  decode batch stays full across heterogeneous lengths.
+* **lockstep** (deprecated ``ServingEngine``): a batch must share one
+  prompt length and prefill+decode run to completion before the next batch.
+* **bucketed** (deprecated ``BucketedEngine``): pad-to-bucket *monolithic*
+  prefill feeding fixed decode slots — every live slot stalls for the whole
+  prefill of an admitted prompt, and each (bucket, batch, padded) shape
+  compiles its own program.
+* **chunked** (``ContinuousEngine``): one compiled ``(1, chunk)`` prefill
+  program with streaming eviction scores, interleaved with decode under a
+  token-budget step.
 
-Reported per engine: aggregate throughput (generated tokens / wall) and
-per-request TTFT / TPOT percentiles (per-request timing is the point —
-the old engine stamped one batch-level TTFT on everyone).
+The **long-tail trace** plants a few 8k–16k prompts amid short traffic —
+the shape that breaks the bucket ladder: the long prompts compile fresh
+power-of-two bucket programs and stall every live decode slot for whole
+monolithic prefills.  Reported per engine: throughput, p95 TTFT, p95 TPOT,
+max decode stall (worst gap between consecutive token emissions of any
+request), and the jit-compile count.  The chunked engine must compile
+strictly fewer programs and cut p95 TPOT / decode stall under the long
+tail — the bench prints an explicit PASS/FAIL verdict line.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -33,25 +40,36 @@ from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import ContinuousEngine, Request, ServingEngine
+from repro.serving import (BucketedEngine, ContinuousEngine, Request,
+                           ServingEngine)
 
-# Heterogeneous lengths (9 distinct values over 3 compile buckets): the
-# lockstep engine can only batch *identical* lengths, so realistic length
-# spread forces it toward batch-1 serves; the continuous engine pads to
-# buckets and keeps its decode slots full regardless.
+# Heterogeneous short lengths (9 distinct values over 3 compile buckets).
 PROMPT_LENS = (17, 24, 31, 41, 48, 60, 75, 90, 120)
 BUCKETS = (32, 64, 128)
+CHUNK = 64
 MAX_NEW = 16
 BUDGET = 16
 
 
-def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int):
-    """Poisson arrivals, uniform mix over PROMPT_LENS."""
+def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int,
+               *, long_tail: bool = False, long_len: int = 8192,
+               n_long: int = 2):
+    """Poisson arrivals, uniform mix over PROMPT_LENS; with ``long_tail``,
+    ``n_long`` prompts of ``long_len`` tokens are planted mid-trace."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    long_uids = set()
+    if long_tail and n_long:
+        assert n_long <= max(n_requests // 3, 1), \
+            "long tail would dominate the trace; raise --requests"
+        # consecutive mid-trace uids: guaranteed n_long *distinct* plants
+        # (an index formula that rounds, e.g. linspace, can collide and
+        # silently shrink the tail)
+        start = n_requests // 3
+        long_uids = set(range(start, start + n_long))
     reqs = []
     for i in range(n_requests):
-        n = int(rng.choice(PROMPT_LENS))
+        n = long_len if i in long_uids else int(rng.choice(PROMPT_LENS))
         reqs.append(Request(
             uid=i, prompt=rng.integers(0, vocab, n).astype(np.int32),
             max_new_tokens=MAX_NEW, arrival_s=float(arrivals[i])))
@@ -64,16 +82,23 @@ def _clone(reqs):
             for r in reqs]
 
 
-def _metrics(reqs, wall):
+def _metrics(reqs, wall, *, tracks_gaps: bool = True):
     toks = sum(len(r.out_tokens) for r in reqs)
     ttft = np.array([r.ttft_s for r in reqs])
     tpot = np.array([r.tpot_s for r in reqs if r.tpot_s > 0])
+    gaps = np.array([r.max_gap_s for r in reqs])
     return {
         "wall_s": wall,
         "tok_per_s": toks / wall,
         "ttft_mean_ms": 1e3 * ttft.mean(),
         "ttft_p95_ms": 1e3 * np.percentile(ttft, 95),
         "tpot_mean_ms": 1e3 * tpot.mean() if len(tpot) else 0.0,
+        "tpot_p95_ms": 1e3 * np.percentile(tpot, 95) if len(tpot) else 0.0,
+        # nan (printed as n/a) when the engine has no per-chunk emission
+        # timestamps — the lockstep engine decodes a batch in one blocking
+        # call, so a 0.0 here would misread as "never stalls"
+        "stall_max_ms": (1e3 * gaps.max() if len(gaps) and tracks_gaps
+                         else float("nan")),
     }
 
 
@@ -104,50 +129,100 @@ def run_lockstep(eng, reqs, *, max_batch=4):
             r.tpot_s = decode_s / max(len(r.out_tokens) - 1, 1)
             r.ttft_s = serve_start + r.ttft_s - r.arrival_s
         done += batch
-    return _metrics(done, time.perf_counter() - t0)
+    return _metrics(done, time.perf_counter() - t0, tracks_gaps=False)
 
 
-def run_continuous(eng, reqs):
+def run_bucketed(eng, reqs):
     t0 = time.perf_counter()
     done = eng.run(reqs)
     wall = time.perf_counter() - t0
     m = _metrics(done, wall)
+    m["compiles"] = (eng.prefill_cache.compile_count()
+                     + len(eng._decode_fns))
     m["compile_cache"] = eng.prefill_cache.stats()
     return m
 
 
+def run_chunked(eng, reqs):
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    m = _metrics(done, wall)
+    m["compiles"] = (eng.chunk_cache.compile_count()
+                     + len(eng._decode_fns))
+    m["compile_cache"] = eng.chunk_cache.stats()
+    m["engine_stats"] = dict(eng.stats)
+    return m
+
+
 def bench(n_requests=24, rate_hz=20.0, policy="lookaheadkv", slots=4,
-          seed=0, warmup=True, report=print):
+          seed=0, warmup=True, long_tail=False, long_len=8192, n_long=2,
+          lockstep=False):
     cfg = get_smoke_config("smollm-135m")
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
-    trace = make_trace(n_requests, rate_hz, seed, cfg.vocab_size)
-    lock_eng = ServingEngine(params, cfg, policy=policy,
-                             evict=EvictionConfig(budget=BUDGET),
-                             lkv_params=lkv, max_new_tokens=MAX_NEW,
-                             eos_id=-1)
-    cont_eng = ContinuousEngine(params, cfg, policy=policy,
-                                evict=EvictionConfig(budget=BUDGET),
-                                lkv_params=lkv, num_slots=slots,
-                                buckets=BUCKETS, max_new_tokens=MAX_NEW,
-                                eos_id=-1)
-    cont_eng.warmup(PROMPT_LENS, batch_sizes=(1, 2, slots))
+    trace = make_trace(n_requests, rate_hz, seed, cfg.vocab_size,
+                       long_tail=long_tail, long_len=long_len, n_long=n_long)
+    kw = dict(policy=policy, evict=EvictionConfig(budget=BUDGET),
+              lkv_params=lkv, max_new_tokens=MAX_NEW, eos_id=-1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        bucket_eng = BucketedEngine(params, cfg, num_slots=slots,
+                                    buckets=BUCKETS, **kw)
+        lock_eng = ServingEngine(params, cfg, **kw) if lockstep else None
+    chunk_eng = ContinuousEngine(params, cfg, num_slots=slots, chunk=CHUNK,
+                                 max_context=max(PROMPT_LENS) + CHUNK, **kw)
+    bucket_eng.warmup(PROMPT_LENS, batch_sizes=(1, 2, slots))
+    chunk_eng.warmup(PROMPT_LENS)
     if warmup:  # one untimed replay per engine compiles every program
-        run_lockstep(lock_eng, _clone(trace))
-        run_continuous(cont_eng, _clone(trace))
-    lock = run_lockstep(lock_eng, _clone(trace))
-    cont = run_continuous(cont_eng, _clone(trace))
-    return lock, cont
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            run_bucketed(bucket_eng, _clone(trace))
+            if lock_eng is not None:
+                run_lockstep(lock_eng, _clone(trace))
+        run_chunked(chunk_eng, _clone(trace))
+    out = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out["bucketed"] = run_bucketed(bucket_eng, _clone(trace))
+        if lock_eng is not None:
+            out["lockstep"] = run_lockstep(lock_eng, _clone(trace))
+    out["chunked"] = run_chunked(chunk_eng, _clone(trace))
+    return out
+
+
+def _verdict(res) -> tuple[bool, str]:
+    b, c = res["bucketed"], res["chunked"]
+    fewer = c["compiles"] < b["compiles"]
+    faster = c["tpot_p95_ms"] < b["tpot_p95_ms"]
+    ok = fewer and faster
+    return ok, (f"{'PASS' if ok else 'FAIL'}: chunked compiles "
+                f"{c['compiles']} vs bucketed {b['compiles']} "
+                f"({'strictly fewer' if fewer else 'NOT fewer'}); "
+                f"p95 TPOT {c['tpot_p95_ms']:.2f}ms vs "
+                f"{b['tpot_p95_ms']:.2f}ms "
+                f"({'lower' if faster else 'NOT lower'})")
 
 
 def run(report):
-    """benchmarks.run entry point."""
-    lock, cont = bench(report=report)
-    for name, m in (("lockstep", lock), ("continuous", cont)):
+    """benchmarks.run entry point: a compact long-tail trace."""
+    res = bench(n_requests=12, rate_hz=20.0, long_tail=True, long_len=2048,
+                n_long=1, warmup=True)
+    for name in ("bucketed", "chunked"):
+        m = res[name]
         report(f"serving/{name}_tok_per_s", None, f"{m['tok_per_s']:.1f}")
-        report(f"serving/{name}_ttft_p95_ms", None, f"{m['ttft_p95_ms']:.0f}")
-    report("serving/continuous_speedup", None,
-           f"{cont['tok_per_s'] / max(lock['tok_per_s'], 1e-9):.2f}x")
+        report(f"serving/{name}_ttft_p95_ms", None,
+               f"{m['ttft_p95_ms']:.0f}")
+        report(f"serving/{name}_tpot_p95_ms", None,
+               f"{m['tpot_p95_ms']:.2f}")
+        report(f"serving/{name}_stall_max_ms", None,
+               f"{m['stall_max_ms']:.0f}")
+        report(f"serving/{name}_compiles", None, f"{m['compiles']}")
+    ok, verdict = _verdict(res)
+    report("serving/longtail_verdict", None, "pass" if ok else "fail")
+    speed = (res["chunked"]["tok_per_s"]
+             / max(res["bucketed"]["tok_per_s"], 1e-9))
+    report("serving/chunked_speedup", None, f"{speed:.2f}x")
 
 
 def main():
@@ -159,18 +234,35 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--long-tail", action="store_true",
+                    help="plant a few long prompts amid short traffic")
+    ap.add_argument("--long-len", type=int, default=8192,
+                    help="long-tail prompt length (8k-16k is the target)")
+    ap.add_argument("--n-long", type=int, default=2)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="also replay through the lockstep baseline")
     args = ap.parse_args()
-    lock, cont = bench(args.requests, args.rate, args.policy, args.slots,
-                       args.seed, warmup=not args.no_warmup)
-    print(f"{'engine':12s} {'tok/s':>8s} {'ttft_ms':>9s} {'ttft_p95':>9s} "
-          f"{'tpot_ms':>8s} {'wall_s':>7s}")
-    for name, m in (("lockstep", lock), ("continuous", cont)):
-        print(f"{name:12s} {m['tok_per_s']:8.1f} {m['ttft_mean_ms']:9.1f} "
+    res = bench(args.requests, args.rate, args.policy, args.slots,
+                args.seed, warmup=not args.no_warmup,
+                long_tail=args.long_tail, long_len=args.long_len,
+                n_long=args.n_long, lockstep=args.lockstep)
+    print(f"{'engine':10s} {'tok/s':>8s} {'ttft_ms':>9s} {'ttft_p95':>9s} "
+          f"{'tpot_ms':>8s} {'tpot_p95':>9s} {'stall_ms':>9s} "
+          f"{'compiles':>8s} {'wall_s':>7s}")
+    for name, m in res.items():
+        stall = (f"{m['stall_max_ms']:9.1f}"
+                 if np.isfinite(m["stall_max_ms"]) else f"{'n/a':>9s}")
+        print(f"{name:10s} {m['tok_per_s']:8.1f} {m['ttft_mean_ms']:9.1f} "
               f"{m['ttft_p95_ms']:9.1f} {m['tpot_mean_ms']:8.2f} "
-              f"{m['wall_s']:7.2f}")
-    ratio = cont["tok_per_s"] / max(lock["tok_per_s"], 1e-9)
-    print(f"continuous/lockstep throughput: {ratio:.2f}x  "
-          f"(compile cache: {cont['compile_cache']})")
+              f"{m['tpot_p95_ms']:9.2f} {stall} "
+              f"{m.get('compiles', 0):8d} {m['wall_s']:7.2f}")
+    ratio = (res["chunked"]["tok_per_s"]
+             / max(res["bucketed"]["tok_per_s"], 1e-9))
+    print(f"chunked/bucketed throughput: {ratio:.2f}x  "
+          f"(chunked cache: {res['chunked']['compile_cache']}, "
+          f"engine: {res['chunked']['engine_stats']})")
+    if args.long_tail:
+        print(_verdict(res)[1])
 
 
 if __name__ == "__main__":

@@ -8,18 +8,19 @@ Two demos over one small model with (quickly trained) lookahead modules:
    served policy-by-policy through the lockstep ``ServingEngine``,
    reporting TTFT, tokens, and the cache-shrink ratio — the paper's memory
    headline (O(n_in) -> O(budget) cache per layer/head).
-2. **Mixed-length traffic** through the ``ContinuousEngine``: requests with
-   several distinct prompt lengths are bucketed for prefill and stream
-   through a fixed set of decode slots — retiring requests free their slot
-   for queued ones mid-stream, and every request reports its *own* TTFT
-   and TPOT.  Post-eviction caches are shape-uniform across prompt
-   lengths, which is exactly what makes slot reuse a constant-shape
+2. **Mixed-length traffic** through the ``ContinuousEngine``: prompts of
+   any length stream through one compiled ``(1, chunk)`` prefill program,
+   interleaved with a fixed set of decode slots — retiring requests free
+   their slot for queued ones mid-stream, and every request reports its
+   *own* TTFT and TPOT.  Post-eviction caches are shape-uniform across
+   prompt lengths, which is exactly what makes slot reuse a constant-shape
    scatter.
 """
 
 import argparse
 import os
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -29,10 +30,12 @@ from repro.common.config import EvictionConfig, TrainConfig
 from repro.configs import get_smoke_config
 from repro.core import objective
 from repro.core.lookahead import init_lookahead_params
+from repro.core.policies import MULTI_PASS
 from repro.data import synthetic
 from repro.models import transformer as tf
 from repro.optim import adam
-from repro.serving import ContinuousEngine, Request, ServingEngine
+from repro.serving import (BucketedEngine, ContinuousEngine, Request,
+                           ServingEngine)
 
 
 def get_or_train_lkv(cfg, params, path="experiments/ckpt/serve_lkv.npz"):
@@ -74,11 +77,13 @@ def compare_policies(cfg, params, lkv, args):
     print(f"{'policy':15s} {'ttft_ms':>9s} {'toks/req':>9s} "
           f"{'cache_ratio':>12s}")
     for pol in policies_to_run:
-        eng = ServingEngine(params, cfg, policy=pol,
-                            evict=EvictionConfig(budget=args.budget,
-                                                 draft_len=8),
-                            lkv_params=lkv, max_new_tokens=args.max_new,
-                            eos_id=-1)
+        with warnings.catch_warnings():  # the lockstep baseline is deprecated
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = ServingEngine(params, cfg, policy=pol,
+                                evict=EvictionConfig(budget=args.budget,
+                                                     draft_len=8),
+                                lkv_params=lkv, max_new_tokens=args.max_new,
+                                eos_id=-1)
         reqs = [Request(uid=i, prompt=p, max_new_tokens=args.max_new)
                 for i, p in enumerate(prompts)]
         t0 = time.time()
@@ -101,11 +106,18 @@ def serve_mixed_traffic(cfg, params, lkv, args):
                                         int(n)).astype(np.int32),
                     max_new_tokens=args.max_new, arrival_s=float(t))
             for i, (n, t) in enumerate(zip(lens, arrivals))]
-    eng = ContinuousEngine(params, cfg, policy=policy,
-                           evict=EvictionConfig(budget=args.budget),
-                           lkv_params=lkv, num_slots=args.slots,
-                           buckets=(32, 64, 128),
-                           max_new_tokens=args.max_new, eos_id=-1)
+    kw = dict(policy=policy, evict=EvictionConfig(budget=args.budget,
+                                                  draft_len=8),
+              lkv_params=lkv, num_slots=args.slots,
+              max_new_tokens=args.max_new, eos_id=-1)
+    if policy in MULTI_PASS or policy == "full":
+        # draft-based baselines and 'full' cannot stream prefill chunks;
+        # serve them through the deprecated bucketed engine
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = BucketedEngine(params, cfg, buckets=(32, 64, 128), **kw)
+    else:
+        eng = ContinuousEngine(params, cfg, chunk=32, max_context=128, **kw)
     t0 = time.time()
     done = eng.run(reqs)
     wall = time.time() - t0
@@ -116,9 +128,10 @@ def serve_mixed_traffic(cfg, params, lkv, args):
               f"{r.ttft_s*1e3:8.1f} {r.tpot_s*1e3:8.2f} "
               f"{len(r.out_tokens):5d}")
     toks = sum(len(r.out_tokens) for r in done)
+    cache = (eng.chunk_cache if isinstance(eng, ContinuousEngine)
+             else eng.prefill_cache)
     print(f"{len(done)} requests / {toks} tokens in {wall:.2f}s "
-          f"({toks/wall:.1f} tok/s); compile cache "
-          f"{eng.prefill_cache.stats()}")
+          f"({toks/wall:.1f} tok/s); compile cache {cache.stats()}")
 
 
 def main():

@@ -35,8 +35,20 @@ def position_scores(
     sink: int = 4,
     budget: int = 0,
     seed: int = 0,
+    seeds: Optional[jnp.ndarray] = None,  # (B,) per-request seeds, int32
 ) -> jnp.ndarray:
-    """Synthetic (B, KV, n_prompt) scores for attention-free policies."""
+    """Synthetic (B, KV, n_prompt) scores for attention-free policies.
+
+    ``seeds`` decorrelates the ``random`` policy across requests: row ``b``
+    draws from ``fold_in(PRNGKey(seed), seeds[b])``.  Every ``random`` draw
+    is additionally folded per *position*, so the value at position p is
+    independent of the score-vector length — chunked prefill (which scores
+    over its full buffer depth) and monolithic prefill (which scores over
+    exactly ``n_prompt`` columns) agree on every shared position, seeded or
+    not.  Without ``seeds`` every row of every batch shares one
+    ``PRNGKey(seed)`` stream — fine for single-request experiments, but a
+    batch of requests would all evict the *same* "random" positions.
+    """
     pos = jnp.arange(n_prompt, dtype=jnp.float32)
     if policy == "streaming_llm":
         recent = pos  # larger position => more recent => higher
@@ -45,7 +57,20 @@ def position_scores(
     elif policy == "full":
         s = jnp.full((n_prompt,), 1.0)
     elif policy == "random":
-        s = jax.random.uniform(jax.random.PRNGKey(seed), (n_prompt,))
+        base = jax.random.PRNGKey(seed)
+
+        def row(kr):
+            return jax.vmap(
+                lambda p: jax.random.uniform(jax.random.fold_in(kr, p))
+            )(jnp.arange(n_prompt))
+
+        if seeds is not None:
+            sb = jax.vmap(
+                lambda rs: row(jax.random.fold_in(base, rs))
+            )(seeds.astype(jnp.uint32))  # (B, n_prompt)
+            return jnp.broadcast_to(
+                sb[:, None, :], (batch, num_kv_heads, n_prompt))
+        s = row(base)
     else:
         raise ValueError(f"not a position policy: {policy}")
     return jnp.broadcast_to(s[None, None, :], (batch, num_kv_heads, n_prompt))

@@ -172,6 +172,7 @@ def run_eviction(
     encoder_embeds: Optional[jnp.ndarray] = None,
     mrope_positions: Optional[jnp.ndarray] = None,
     prompt_lens: Optional[jnp.ndarray] = None,  # (B,) bucket-padded prefill
+    seeds: Optional[jnp.ndarray] = None,  # (B,) per-request seeds (random)
 ) -> EvictionResult:
     """Prefill + evict under ``policy``; returns next-token logits and the
     budgeted decode cache."""
@@ -180,7 +181,8 @@ def run_eviction(
         res = tf.prefill(
             params, cfg, tokens, policy=policy, evict=evict,
             lkv_params=lkv_params if policy == "lookaheadkv" else None,
-            extra_slots=extra_slots, prompt_lens=prompt_lens, **kw,
+            extra_slots=extra_slots, prompt_lens=prompt_lens, seeds=seeds,
+            **kw,
         )
         return EvictionResult(logits=res.logits, cache=res.cache)
     if prompt_lens is not None:
@@ -214,3 +216,59 @@ def run_eviction(
         return EvictionResult(logits=res.logits, cache=res.cache)
 
     raise ValueError(f"unknown policy {policy}; known: {ALL_POLICIES}")
+
+
+def chunk_capacity_for(cfg: ModelConfig, policy: str, n_prompt: int,
+                       chunk: int, *, n_obs: int = 0) -> int:
+    """KV-buffer depth for a chunked prefill of ``n_prompt`` tokens: the
+    prompt plus the policy's appended observation rows, rounded up to a
+    whole number of chunks (the buffer is only ever written in chunk-sized
+    or observation-sized blocks)."""
+    if policy == "lookaheadkv":
+        n_obs = cfg.lookahead.n_lookahead if cfg.lookahead else 0
+    need = n_prompt + n_obs
+    return -(-need // chunk) * chunk
+
+
+def run_eviction_chunked(
+    policy: str,
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, n_in) int tokens (all rows same true length)
+    *,
+    chunk: int,
+    evict: EvictionConfig,
+    lkv_params: Optional[dict] = None,
+    extra_slots: int = 0,
+    gt_boundary: Optional[int] = None,  # gt_oracle: X|Y boundary in ``tokens``
+    seeds: Optional[jnp.ndarray] = None,
+    capacity: Optional[int] = None,
+) -> EvictionResult:
+    """Streamed prefill + evict: processes the prompt in fixed ``chunk``
+    blocks with online score accumulation, then evicts once at prompt end —
+    same kept cache and next-token logits as ``run_eviction`` for every
+    single-pass policy (the serving engine drives the same two programs
+    itself so it can interleave decode steps between chunks)."""
+    assert policy in SINGLE_PASS, f"{policy} cannot stream (multi-pass)"
+    n_tokens = tokens.shape[1]
+    n = gt_boundary if gt_boundary is not None else n_tokens
+    obs_tokens = tokens[:, n:] if gt_boundary is not None else None
+    if capacity is None:
+        capacity = chunk_capacity_for(cfg, policy, n, chunk,
+                                      n_obs=n_tokens - n)
+    state = tf.init_chunk_state(cfg, policy, tokens.shape[0], capacity)
+    n_arr = jnp.asarray(n, jnp.int32)
+    logits = None
+    for s in range(0, n, chunk):
+        blk = tokens[:, s:s + chunk]
+        if blk.shape[1] < chunk:  # partial final chunk: pad rows are inert
+            pad = chunk - blk.shape[1]
+            blk = jnp.pad(blk, ((0, 0), (0, pad)))
+        state, logits = tf.prefill_chunk(params, cfg, state, blk, n_arr,
+                                         policy=policy)
+    cache = tf.prefill_finalize(
+        params, cfg, state, n_arr, policy=policy, evict=evict,
+        lkv_params=lkv_params if policy == "lookaheadkv" else None,
+        obs_tokens=obs_tokens, extra_slots=extra_slots, seeds=seeds,
+    )
+    return EvictionResult(logits=logits, cache=cache)

@@ -15,18 +15,45 @@ at all and are handled in ``eviction.py``.
 Score post-processing (paper's standard eviction configuration):
 GQA mean-reduction over the query heads of each KV group, then 1-D max-pool
 (kernel 7, same padding) along the key axis.
+
+Streaming (chunked-prefill) scoring
+-----------------------------------
+``ScoreState`` reformulates every single-pass policy's importance score as
+an *online* quantity over prompt chunks (KVpop-style predictive online
+pruning), so prefill can stream fixed-size chunks and still evict exactly
+like a monolithic pass:
+
+* **cumulative** (h2o): each chunk adds its queries' softmax column masses
+  into a running per-key accumulator — a commutative sum, so the final
+  scores are chunk-split-invariant.
+* **observation-window** (snapkv, pyramidkv, tova): only the last
+  ``window`` prompt queries matter (1 for tova), so the state is a rolling
+  buffer of the newest ``window`` rotary-position-encoded queries; scoring
+  defers to the final chunk when the window is complete.
+* **final-observation** (lookaheadkv, gt_oracle): the observation rows are
+  appended *after* the prompt (learned lookahead rows / the GT response),
+  so nothing accumulates during prompt chunks — the observation pass runs
+  once at prompt end over the fully materialized key buffer.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.ref import NEG_INF, _expand_gqa
 
 # observation semantics per policy: how many trailing rows act as queries
 OBS_POLICIES = ("lookaheadkv", "snapkv", "tova", "h2o", "gt")
 POSITION_POLICIES = ("streaming_llm", "random", "full")
+
+# streaming-prefill classification (see module docstring)
+STREAMING_CUMULATIVE = ("h2o",)
+STREAMING_WINDOW = ("snapkv", "pyramidkv", "tova")
+FINAL_OBS = ("lookaheadkv", "gt_oracle")
 
 
 def observation_scores(
@@ -84,3 +111,179 @@ def postprocess(
     """Eviction-time pipeline: GQA-reduce then max-pool.  (B, KV, S)."""
     s = gqa_reduce(scores_per_qhead, num_kv_heads)
     return maxpool1d(s, pool_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Streaming scores for chunked prefill
+# ---------------------------------------------------------------------------
+
+
+class ScoreState(NamedTuple):
+    """Per-policy streaming score accumulator, threaded across prefill chunks.
+
+    Leaves carry a leading layer axis L (the transformer layer scan slices
+    it per layer).  Fields are ``None`` for policies that don't need them —
+    the pytree structure is static per compiled (chunk, policy) program.
+    """
+
+    acc: Optional[jnp.ndarray] = None   # (L, B, H, K) f32 column-mass sums
+    cnt: Optional[jnp.ndarray] = None   # ()  f32 scoring queries seen so far
+    qbuf: Optional[jnp.ndarray] = None  # (L, B, W, H, hd) newest W rot. queries
+
+
+def stream_window(policy: str, window_size: int) -> int:
+    """Observation-window width a streaming-window policy defers on."""
+    return 1 if policy == "tova" else window_size
+
+
+def init_score_state(
+    policy: str,
+    num_layers: int,
+    batch: int,
+    num_heads: int,
+    head_dim: int,
+    capacity: int,  # key-buffer depth K
+    *,
+    window_size: int = 32,
+    dtype=jnp.float32,
+) -> ScoreState:
+    """Zero state sized for ``capacity`` buffered keys (policy-shaped)."""
+    if policy in STREAMING_CUMULATIVE:
+        return ScoreState(
+            acc=jnp.zeros((num_layers, batch, num_heads, capacity),
+                          jnp.float32),
+            cnt=jnp.zeros((), jnp.float32),
+        )
+    if policy in STREAMING_WINDOW:
+        w = stream_window(policy, window_size)
+        return ScoreState(
+            qbuf=jnp.zeros((num_layers, batch, w, num_heads, head_dim),
+                           dtype),
+        )
+    return ScoreState()  # final-observation and position policies
+
+
+def chunk_column_masses(
+    q: jnp.ndarray,  # (B, C, H, hd) rotary-encoded chunk queries
+    k: jnp.ndarray,  # (B, K, KV, hd) key buffer; col j holds position j
+    *,
+    q_offset: jnp.ndarray,  # scalar int32 — absolute position of q row 0
+    window=None,
+    row_valid: Optional[jnp.ndarray] = None,  # (B, C) real-row mask
+) -> jnp.ndarray:
+    """Summed softmax column masses of the chunk's queries: (B, H, K) f32.
+
+    The per-row softmax is the same computation as ``ref.lookahead_score``
+    (causal on absolute positions, NEG_INF masking, f32) — buffer columns a
+    row cannot see contribute *exact zeros*, so streaming accumulation over
+    chunks reproduces the monolithic scores up to summation order (bitwise
+    for single-chunk policies).  Rows beyond the true prompt length are
+    zeroed via ``row_valid`` before the sum.
+
+    Note: this materializes the (B, H, C, K) probability block densely —
+    ~C·K f32 per (batch, head).  Fine for observation-sized C and the CPU
+    suite; for TPU-scale cumulative (h2o) scoring over very deep buffers,
+    the right routing is ``ops.lookahead_score``'s streaming/Pallas
+    machinery (sum = mean · n_rows), which first needs a row-validity mask
+    there — tracked in ROADMAP.md.  Dense is kept for now because blocked
+    summation would reassociate the row sum and give up the bit-exact
+    parity with monolithic prefill that the test suite pins.
+    """
+    B, C, H, hd = q.shape
+    K, KV = k.shape[1], k.shape[2]
+    kf = _expand_gqa(k, H // KV)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(C)
+    k_pos = jnp.arange(K)
+    ok = k_pos[None, :] <= q_pos[:, None]  # (C, K)
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    logits = jnp.where(ok[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, H, C, K)
+    if row_valid is not None:
+        probs = probs * row_valid[:, None, :, None].astype(jnp.float32)
+    return probs.sum(axis=2)
+
+
+def update_layer_scores(
+    policy: str,
+    acc_l: Optional[jnp.ndarray],   # (B, H, K) this layer's accumulator
+    qbuf_l: Optional[jnp.ndarray],  # (B, W, H, hd) this layer's query window
+    q_rot: jnp.ndarray,  # (B, C, H, hd) the chunk's rotary-encoded queries
+    k_buf: jnp.ndarray,  # (B, K, KV, hd) keys incl. this chunk
+    *,
+    q_offset: jnp.ndarray,  # scalar int32 chunk start
+    n_total: jnp.ndarray,  # scalar int32 true prompt length
+    window=None,
+) -> tuple[Optional[jnp.ndarray], Optional[jnp.ndarray]]:
+    """One chunk's streaming update for one layer; returns (acc', qbuf')."""
+    C = q_rot.shape[1]
+    if policy in STREAMING_CUMULATIVE:
+        row_valid = (q_offset + jnp.arange(C))[None] < n_total
+        row_valid = jnp.broadcast_to(row_valid, (q_rot.shape[0], C))
+        acc_l = acc_l + chunk_column_masses(
+            q_rot, k_buf, q_offset=q_offset, window=window,
+            row_valid=row_valid,
+        )
+        return acc_l, qbuf_l
+    if policy in STREAMING_WINDOW:
+        # roll the newest W *valid* rows in: global rows [total-W, total)
+        # where total = min(n_total, chunk end).  Early chunks shorter than
+        # W leave stale low slots that later chunks displace before any read.
+        W = qbuf_l.shape[1]
+        total = jnp.minimum(n_total, q_offset + C)
+        joined = jnp.concatenate([qbuf_l, q_rot], axis=1)  # (B, W + C, H, hd)
+        start = jnp.clip(total - q_offset, 0, C)  # joined idx of row total-W
+        qbuf_l = jax.lax.dynamic_slice_in_dim(joined, start, W, axis=1)
+        return acc_l, qbuf_l
+    return acc_l, qbuf_l
+
+
+def finalize_layer_scores(
+    policy: str,
+    k_buf: jnp.ndarray,  # (B, K, KV, hd)
+    n_total: jnp.ndarray,  # scalar int32 true prompt length
+    *,
+    acc_l: Optional[jnp.ndarray] = None,
+    cnt: Optional[jnp.ndarray] = None,
+    qbuf_l: Optional[jnp.ndarray] = None,
+    obs_masses_l: Optional[jnp.ndarray] = None,  # (B, H, K) mean obs masses
+    num_kv_heads: int,
+    pool_kernel: int,
+    window_size: int = 32,
+    window=None,
+) -> jnp.ndarray:
+    """Eviction-ready scores (B, KV, K) at prompt end, mirroring the
+    monolithic pipeline exactly: GQA-reduce, max-pool over the *scored*
+    region only (columns past the policy's boundary are -inf, matching the
+    monolithic maxpool's edge padding), then the snapkv-family force-keep
+    boost, then the valid-key mask.  Columns >= ``n_total`` rank last and
+    are additionally masked out of the cache by ``evict_layer``'s
+    ``key_mask``."""
+    B, K, KV, _ = k_buf.shape
+    col = jnp.arange(K)
+    if policy in STREAMING_CUMULATIVE:
+        s_qh = acc_l / jnp.maximum(cnt, 1.0)
+        boundary = n_total
+    elif policy in STREAMING_WINDOW:
+        W = stream_window(policy, window_size)
+        boundary = n_total - W
+        s_qh = chunk_column_masses(
+            qbuf_l, k_buf, q_offset=boundary, window=window,
+        ) / jnp.float32(W)
+    else:  # final-observation policies
+        assert obs_masses_l is not None, f"{policy} needs an observation pass"
+        s_qh = obs_masses_l
+        boundary = n_total
+    s_kv = gqa_reduce(s_qh, num_kv_heads)
+    s_kv = jnp.where(col[None, None, :] < boundary, s_kv, -jnp.inf)
+    s_kv = maxpool1d(s_kv, pool_kernel)
+    if policy in STREAMING_WINDOW:
+        # monolithic path: scores past the boundary are zero-padded, then the
+        # observation window is force-kept — exactly 1e9 per window column
+        in_window = (col[None, None, :] >= boundary) & \
+            (col[None, None, :] < n_total)
+        s_kv = jnp.where(in_window, 1e9, s_kv)
+    return jnp.where(col[None, None, :] < n_total, s_kv, NEG_INF)

@@ -1,0 +1,128 @@
+"""Pallas TPU cross-chunk flash attention (streaming / chunked prefill).
+
+One query chunk of ``C`` rows starting at absolute position ``q_offset``
+attends over the materialized key/value buffer: prior-chunk keys are fully
+visible, the chunk attends itself causally, and buffer columns at or past
+the chunk end are causally invisible (buffer column ``j`` holds the token
+at absolute position ``j``).  ``q_offset`` is a *traced* scalar — one
+compiled program serves every chunk index of every prompt length, which is
+what lets the serving compile cache drop the prompt-length bucket ladder.
+
+Tiling: grid = (B, H, nk) with the key axis innermost (sequential).  The
+whole chunk rides in VMEM as a single (C, hd) query tile; key blocks whose
+first column lies beyond the chunk's last visible position are skipped
+(the usual causal block pruning — for an early chunk of a long buffer
+almost every key block short-circuits).
+
+GQA is handled in the index map (query head ``h`` reads kv head
+``h // group``).  Oracle: ``ref.attention`` with explicit ``q_pos``.
+jnp fallback with identical math: ``ops.chunk_attention``'s direct path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(offs_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            window, block_k, nk, C, scale):
+    ik = pl.program_id(2)
+    s0 = offs_ref[0]  # absolute position of q row 0
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block pruning: the chunk's last row sits at s0 + C - 1; key
+    # blocks starting past it contain no visible column for any row.
+    @pl.when(ik * block_k <= s0 + C - 1)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (C, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (C, bk)
+
+        q_pos = s0 + jax.lax.broadcasted_iota(jnp.int32, (C, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (C, block_k), 1)
+        ok = k_pos <= q_pos
+        if window is not None:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def chunk_attention_pallas(
+    q: jnp.ndarray,  # (B, C, H, hd) rotary-encoded chunk queries
+    k: jnp.ndarray,  # (B, K, KV, hd) key buffer (col j = position j)
+    v: jnp.ndarray,
+    q_offset,  # scalar int32 (may be traced) — position of q row 0
+    *,
+    window: int | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, C, H, hd = q.shape
+    K, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    block_k = min(block_k, K)
+    while K % block_k:
+        block_k //= 2
+    nk = K // block_k
+    scale = 1.0 / (hd ** 0.5)
+    if window == 0:
+        window = None
+    offs = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (1,))
+
+    kernel = functools.partial(
+        _kernel, window=window, block_k=block_k, nk=nk, C=C, scale=scale,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, ik, offs: (b, 0, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, ik, offs, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, ik, offs, g=group: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, hd),
+                               lambda b, h, ik, offs: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, hd), q.dtype),
+        interpret=interpret,
+    )(offs, q, k, v)

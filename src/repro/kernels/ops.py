@@ -158,6 +158,51 @@ def _chunked_attention(q, k, v, *, causal, window, q_offset, kv_mask,
 
 
 # ---------------------------------------------------------------------------
+# cross-chunk attention (streaming / chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def chunk_attention(
+    q: jnp.ndarray,  # (B, C, H, hd) rotary-encoded chunk queries
+    k: jnp.ndarray,  # (B, K, KV, hd) materialized key buffer (col j = pos j)
+    v: jnp.ndarray,
+    *,
+    q_offset,  # scalar int32 (usually traced) — position of q row 0
+    window=None,  # None | python int | traced int32 scalar
+    block_q: int = 256,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    """Attention of one prefill chunk over the prompt-so-far buffer.
+
+    Prior keys (columns < ``q_offset``) are fully visible, the chunk is
+    causal within itself, and columns at or beyond the chunk end are
+    causally invisible — so the buffer may be deeper than the tokens
+    streamed so far without any explicit validity mask.  ``q_offset`` is
+    traced: one compiled program serves every chunk position.
+    """
+    B, C, H, hd = q.shape
+    K = k.shape[1]
+    static_window = window is None or isinstance(window, int)
+    if use_pallas() and static_window:
+        from repro.kernels import chunk_attention as ck
+
+        return ck.chunk_attention_pallas(
+            q, k, v, q_offset, window=window, block_k=min(block_k, K),
+            interpret=_pallas_interpret(),
+        )
+    if K <= _DIRECT_SEQ:
+        from repro.kernels import ref
+
+        q_pos = jnp.broadcast_to(
+            jnp.asarray(q_offset, jnp.int32) + jnp.arange(C), (B, C))
+        return ref.attention(q, k, v, causal=True, window=window, q_pos=q_pos)
+    return _chunked_attention(
+        q, k, v, causal=True, window=window, q_offset=q_offset,
+        kv_mask=None, block_q=block_q, block_k=block_k,
+    )
+
+
+# ---------------------------------------------------------------------------
 # decode attention (single new token vs long cache)
 # ---------------------------------------------------------------------------
 

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -18,9 +19,11 @@ import numpy as np
 from repro.checkpoint import io as ckpt
 from repro.common.config import EvictionConfig
 from repro.configs import get_config, get_smoke_config
+from repro.core import policies
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import ContinuousEngine, Request, ServingEngine
+from repro.serving import (BucketedEngine, ContinuousEngine, Request,
+                           ServingEngine)
 
 
 def main():
@@ -38,6 +41,8 @@ def main():
                     help="serve mixed-length traffic through the "
                          "continuous-batching engine")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size (continuous engine)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -53,11 +58,23 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     if args.continuous:
-        eng = ContinuousEngine(
-            params, cfg, policy=args.policy,
-            evict=EvictionConfig(budget=args.budget, draft_len=8),
-            lkv_params=lkv, num_slots=args.slots,
-            max_new_tokens=args.max_new, eos_id=-1)
+        if args.policy in policies.MULTI_PASS or args.policy == "full":
+            # draft-based baselines and 'full' cannot stream prefill chunks;
+            # fall back to the deprecated bucketed engine for them
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                eng = BucketedEngine(
+                    params, cfg, policy=args.policy,
+                    evict=EvictionConfig(budget=args.budget, draft_len=8),
+                    lkv_params=lkv, num_slots=args.slots,
+                    max_new_tokens=args.max_new, eos_id=-1)
+        else:
+            eng = ContinuousEngine(
+                params, cfg, policy=args.policy,
+                evict=EvictionConfig(budget=args.budget, draft_len=8),
+                lkv_params=lkv, num_slots=args.slots, chunk=args.chunk,
+                max_context=max(args.n_in, args.chunk),
+                max_new_tokens=args.max_new, eos_id=-1)
         lens = rng.integers(args.n_in // 2, args.n_in + 1, args.requests)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, cfg.vocab_size,
@@ -68,10 +85,12 @@ def main():
         done = eng.run(reqs)
         wall = time.time() - t0
     else:
-        eng = ServingEngine(
-            params, cfg, policy=args.policy,
-            evict=EvictionConfig(budget=args.budget, draft_len=8),
-            lkv_params=lkv, max_new_tokens=args.max_new, eos_id=-1)
+        with warnings.catch_warnings():  # explicit lockstep-baseline request
+            warnings.simplefilter("ignore", DeprecationWarning)
+            eng = ServingEngine(
+                params, cfg, policy=args.policy,
+                evict=EvictionConfig(budget=args.budget, draft_len=8),
+                lkv_params=lkv, max_new_tokens=args.max_new, eos_id=-1)
         reqs = [Request(uid=i,
                         prompt=rng.integers(0, cfg.vocab_size,
                                             args.n_in).astype(np.int32),

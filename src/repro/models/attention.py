@@ -121,6 +121,45 @@ def prefill_attention(
     return out, q, k, v
 
 
+def chunk_prefill_attention(
+    p: dict,
+    a: AttentionConfig,
+    h: jnp.ndarray,  # (B, C, D) chunk hidden states
+    inp: AttnInputs,  # positions = q_offset + arange(C)
+    k_buf: jnp.ndarray,  # (B, K, KV, hd) materialized prompt keys so far
+    v_buf: jnp.ndarray,
+    *,
+    q_offset,  # scalar int32 (traced) — absolute position of chunk row 0
+    is_global: jnp.ndarray | bool = True,
+    lora: Optional[dict] = None,
+    lora_scale: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Streaming-prefill attention: project + rotate the chunk, append its
+    K/V into the prompt buffer at ``q_offset``, and attend the chunk's
+    queries over prior-chunk keys plus causal self-attention within the
+    chunk (``ops.chunk_attention``).  Returns (out, q, k_buf', v_buf') —
+    the rotary-encoded q feeds the streaming eviction scores, the updated
+    buffers carry the materialized KV to the next chunk.
+
+    The buffer must be deep enough for the write (``q_offset + C <= K``);
+    ``jax.lax.dynamic_update_slice`` would otherwise silently clamp the
+    start index and corrupt earlier chunks' keys.
+    """
+    q, k, v = qkv(p, a, h, inp, lora=lora, lora_scale=lora_scale)
+    k_buf = jax.lax.dynamic_update_slice(
+        k_buf, k.astype(k_buf.dtype), (0, q_offset, 0, 0))
+    v_buf = jax.lax.dynamic_update_slice(
+        v_buf, v.astype(v_buf.dtype), (0, q_offset, 0, 0))
+    window = layer_window(a, is_global)
+    out = ops.chunk_attention(q, k_buf, v_buf, q_offset=q_offset,
+                              window=window)
+    B, C = h.shape[:2]
+    out = out.reshape(B, C, a.q_dim)
+    out = linear(out, p["wo"], lora=_lora_for(lora, "wo"),
+                 lora_mask=inp.lookahead_mask, lora_scale=lora_scale)
+    return out, q, k_buf, v_buf
+
+
 _HUGE_WINDOW = 1 << 30
 
 

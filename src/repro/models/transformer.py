@@ -4,8 +4,12 @@ One parameter tree + three entry points:
 
 * ``prefill``      — full-sequence forward with optional lookahead rows,
                      per-layer importance scoring, and in-scan KV eviction.
-                     Used for serving prefill, the LookaheadKV training passes
-                     (GT pass and lookahead pass), and plain LM training.
+                     Used for the LookaheadKV training passes (GT pass and
+                     lookahead pass), plain LM training, and the deprecated
+                     bucketed serving path.
+* ``prefill_chunk`` / ``prefill_finalize`` — streaming prefill: fixed
+                     (B, chunk) blocks with online score accumulation, one
+                     eviction at prompt end.  The serving prefill path.
 * ``decode_step``  — single-token step against the (possibly evicted) cache.
 * ``encode``       — whisper bidirectional encoder over stub frame embeddings.
 
@@ -231,6 +235,7 @@ def prefill(
     want_logits: str = "last",  # "last" | "all" | "none"
     want_ssm_cache: bool = False,
     prompt_lens: Optional[jnp.ndarray] = None,  # (B,) true lens, <= n_real
+    seeds: Optional[jnp.ndarray] = None,  # (B,) per-request seeds (random)
 ) -> PrefillResult:
     """``prompt_lens`` enables bucket-padded prefill (continuous-batching
     serving): inputs are right-padded to a shared bucket length, and every
@@ -415,31 +420,8 @@ def prefill(
                 ys["cross_cache"] = dict(ev.evict_layer(
                     sc, x["ck"], x["cv"], min(evict.cross_budget, Se)
                 )._asdict())
-        aux = jnp.zeros((), jnp.float32)
-        if cfg.moe is not None:
-            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
-            moe_lora = None
-            if lora_l is not None and lora_l.get("moe"):
-                moe_lora = lora_l["moe"].get("shared")
-            if cfg.moe.dispatch == "sparse":
-                mo, aux = moe_mod.apply_sparse(
-                    lp["moe"], cfg, u, lora=moe_lora,
-                    lora_mask=lookahead_mask, lora_scale=ls,
-                )
-            else:
-                mo, aux = moe_mod.apply(
-                    lp["moe"], cfg, u, lora=moe_lora,
-                    lora_mask=lookahead_mask, lora_scale=ls,
-                )
-            h = h + mo
-        elif cfg.d_ff > 0:
-            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
-            h = h + mlp_mod.apply(
-                lp["mlp"], cfg, u,
-                lora=None if lora_l is None else lora_l.get("mlp"),
-                lora_mask=lookahead_mask, lora_scale=ls,
-            )
-        ys["aux"] = aux
+        h, ys["aux"] = _ffn_residual(h, lp, cfg, lora_l=lora_l,
+                                     lora_mask=lookahead_mask, ls=ls)
 
         # ---- scoring + eviction (attention archs only) ----
         if cfg.uses_attention and needs_scores and obs_policy is not None:
@@ -470,7 +452,8 @@ def prefill(
                     s_kv = ev.keep_window(s_kv, S - boundary)
             else:
                 s_kv = ev.position_scores(
-                    policy, n_keys, B, a.num_kv_heads, sink=evict.sink
+                    policy, n_keys, B, a.num_kv_heads, sink=evict.sink,
+                    seeds=seeds,
                 )
             if prompt_valid is not None:
                 # padded keys rank last (max-pool may have bled real-neighbour
@@ -526,6 +509,323 @@ def prefill(
     elif want_logits == "all":
         logits = unembed(params, cfg, h[:, :n_real])
     return PrefillResult(logits=logits, cache=cache, scores=scores, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (streaming eviction scores)
+# ---------------------------------------------------------------------------
+#
+# ``prefill`` above runs the whole prompt as one program — one compile per
+# (prompt-bucket, batch) shape, and a long prompt monopolizes the device for
+# its whole forward pass.  The chunked path streams fixed-size (B, chunk)
+# token blocks instead:
+#
+#   * each chunk projects its K/V and appends them into a materialized
+#     prompt buffer (``attention.chunk_prefill_attention`` — cross-chunk
+#     flash attention over prior keys + causal self-attention, with a
+#     *traced* chunk offset, so one compiled program serves every chunk of
+#     every prompt length);
+#   * a per-policy ``ScoreState`` (core/scoring.py) accumulates eviction
+#     scores online — h2o sums column masses chunk by chunk, the
+#     snapkv/pyramidkv/tova family rolls the newest observation-window
+#     queries, and lookaheadkv/gt_oracle defer to a final observation pass;
+#   * ``prefill_finalize`` runs the *same* ``evict_layer`` once at prompt
+#     end, so the evicted cache matches monolithic prefill exactly (same
+#     kept (layer, head, position) sets; logits bitwise on the reference
+#     path, within fp tolerance otherwise).
+#
+# Chunked prefill serves attention(-plus-FFN/MoE) decoder-only archs — the
+# same family the continuous-batching engine admits.
+
+
+class ChunkState(NamedTuple):
+    """Carried state of a streaming prefill: the materialized prompt KV and
+    the policy's streaming score accumulator.  Buffer depth ``K`` bounds
+    the prompt (plus observation rows) — it is HBM that limits prompt
+    length, not a compile-time bucket table."""
+
+    k: jnp.ndarray  # (L, B, K, KV, hd) prompt keys; col j = position j
+    v: jnp.ndarray  # (L, B, K, KV, hd)
+    score: scoring.ScoreState
+    pos: jnp.ndarray  # () int32 — tokens streamed so far
+
+
+def chunkable(cfg: ModelConfig) -> bool:
+    a = cfg.attn
+    return (cfg.uses_attention and not cfg.uses_ssm
+            and not cfg.is_encoder_decoder and not a.mrope
+            and not cfg.embeds_in)
+
+
+def init_chunk_state(cfg: ModelConfig, policy: str, batch: int,
+                     capacity: int) -> ChunkState:
+    """Fresh streaming-prefill state with a ``capacity``-deep KV buffer.
+
+    ``capacity`` must cover the prompt *plus* any appended observation rows
+    (lookaheadkv's learned rows / gt_oracle's response suffix)."""
+    assert chunkable(cfg), "chunked prefill serves attention-only archs"
+    a = cfg.attn
+    lk = cfg.lookahead
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    kv = jnp.zeros((L, batch, capacity, a.num_kv_heads, a.head_dim), dtype)
+    score = scoring.init_score_state(
+        policy, L, batch, a.num_heads, a.head_dim, capacity,
+        window_size=lk.window_size if lk else 32, dtype=dtype,
+    )
+    return ChunkState(k=kv, v=jnp.zeros_like(kv), score=score,
+                      pos=jnp.zeros((), jnp.int32))
+
+
+def _ffn_residual(h, lp, cfg: ModelConfig, *, lora_l=None, lora_mask=None,
+                  ls: float = 1.0):
+    """The post-attention half of a block (MoE or MLP residual) — the one
+    definition shared by monolithic prefill, the chunk step, the
+    observation pass (which thread the lookahead LoRA), and decode.
+    Returns (h, aux) where aux is the MoE load-balance loss (zero
+    otherwise)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        moe_lora = None
+        if lora_l is not None and lora_l.get("moe"):
+            moe_lora = lora_l["moe"].get("shared")
+        apply = (moe_mod.apply_sparse if cfg.moe.dispatch == "sparse"
+                 else moe_mod.apply)
+        mo, aux = apply(lp["moe"], cfg, u, lora=moe_lora,
+                        lora_mask=lora_mask, lora_scale=ls)
+        h = h + mo
+    elif cfg.d_ff > 0:
+        u = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + mlp_mod.apply(
+            lp["mlp"], cfg, u,
+            lora=None if lora_l is None else lora_l.get("mlp"),
+            lora_mask=lora_mask, lora_scale=ls,
+        )
+    return h, aux
+
+
+def prefill_chunk(
+    params: dict,
+    cfg: ModelConfig,
+    state: ChunkState,
+    tokens: jnp.ndarray,  # (B, chunk) int tokens; rows past n_total are pad
+    n_total: jnp.ndarray,  # () int32 — true prompt length (shared across B)
+    *,
+    policy: str,
+) -> tuple[ChunkState, jnp.ndarray]:
+    """Process one fixed-size prompt chunk starting at ``state.pos``.
+
+    Returns (state', logits (B, V) of the chunk's last *real* row) — the
+    caller keeps the final chunk's logits as the prompt's next-token
+    distribution.  Pad rows in a partial final chunk are harmless: causal
+    masking hides their keys from every real row, they carry zero score
+    weight, and the finalize step masks their buffer columns out of the
+    cache.
+    """
+    a = cfg.attn
+    assert chunkable(cfg), "chunked prefill serves attention-only archs"
+    h = embed(params, cfg, tokens)
+    B, C = h.shape[:2]
+    s = state.pos
+    positions = jnp.broadcast_to(s + jnp.arange(C), (B, C))
+    inp = AttnInputs(positions=positions)
+    flags = is_global_flags(cfg)
+
+    xs: dict = {"p": params["layers"], "k": state.k, "v": state.v}
+    if flags is not None:
+        xs["flag"] = jnp.asarray(flags)
+    if state.score.acc is not None:
+        xs["acc"] = state.score.acc
+    if state.score.qbuf is not None:
+        xs["qbuf"] = state.score.qbuf
+
+    def body(h, x):
+        lp = x["p"]
+        flag = x.get("flag", True)
+        u = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        out, q, k_buf, v_buf = attn_mod.chunk_prefill_attention(
+            lp["attn"], a, u, inp, x["k"], x["v"], q_offset=s,
+            is_global=flag,
+        )
+        h = h + out
+        h, _ = _ffn_residual(h, lp, cfg)
+        ys: dict = {"k": k_buf, "v": v_buf}
+        acc_l, qbuf_l = scoring.update_layer_scores(
+            policy, x.get("acc"), x.get("qbuf"), q, k_buf, q_offset=s,
+            n_total=n_total, window=layer_window(a, flag),
+        )
+        if acc_l is not None:
+            ys["acc"] = acc_l
+        if qbuf_l is not None:
+            ys["qbuf"] = qbuf_l
+        return h, ys
+
+    h, ys = jax.lax.scan(body, h, xs)
+
+    score = state.score
+    if score.acc is not None:
+        score = score._replace(
+            acc=ys["acc"],
+            cnt=score.cnt + jnp.clip(n_total - s, 0, C).astype(jnp.float32),
+        )
+    if score.qbuf is not None:
+        score = score._replace(qbuf=ys["qbuf"])
+    row = jnp.clip(n_total - 1 - s, 0, C - 1)
+    logits = unembed(params, cfg, h[jnp.arange(B), row])
+    return (
+        ChunkState(k=ys["k"], v=ys["v"], score=score, pos=s + C),
+        logits,
+    )
+
+
+def _chunk_observation_pass(
+    params: dict,
+    cfg: ModelConfig,
+    state: ChunkState,
+    n_total: jnp.ndarray,
+    *,
+    policy: str,
+    lkv_params: Optional[dict],
+    obs_tokens: Optional[jnp.ndarray],
+):
+    """Final-chunk observation forward for lookaheadkv / gt_oracle: run the
+    observation rows (learned lookahead rows / the GT response suffix)
+    through the stack against the materialized prompt KV, appending their
+    keys after the prompt so each row's softmax includes the observation
+    keys exactly as in monolithic prefill.  Returns (k_buf, v_buf,
+    obs_masses (L, B, H, K))."""
+    a = cfg.attn
+    B = state.k.shape[1]
+    if policy == "lookaheadkv":
+        assert lkv_params is not None, "lookaheadkv needs trained modules"
+        emb = lkv_params["emb"].astype(jnp.dtype(cfg.dtype))
+        n_obs = emb.shape[0]
+        h = jnp.broadcast_to(emb[None], (B, n_obs, emb.shape[1]))
+        lora_tree = lkv_params.get("lora")
+        ls = lora_scale(cfg)
+        lmask = jnp.ones((B, n_obs, 1), h.dtype)
+    else:  # gt_oracle: the response rows are the observation window
+        assert obs_tokens is not None, "gt_oracle needs the response rows"
+        h = embed(params, cfg, obs_tokens)
+        n_obs = h.shape[1]
+        lora_tree, ls, lmask = None, 1.0, None
+    positions = jnp.broadcast_to(n_total + jnp.arange(n_obs), (B, n_obs))
+    inp = AttnInputs(positions=positions, lookahead_mask=lmask)
+    flags = is_global_flags(cfg)
+
+    xs: dict = {"p": params["layers"], "k": state.k, "v": state.v}
+    if lora_tree is not None:
+        xs["lora"] = lora_tree
+    if flags is not None:
+        xs["flag"] = jnp.asarray(flags)
+
+    def body(h, x):
+        lp = x["p"]
+        lora_l = x.get("lora")
+        flag = x.get("flag", True)
+        u = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        out, q, k_buf, v_buf = attn_mod.chunk_prefill_attention(
+            lp["attn"], a, u, inp, x["k"], x["v"], q_offset=n_total,
+            is_global=flag,
+            lora=None if lora_l is None else lora_l.get("attn"),
+            lora_scale=ls,
+        )
+        h = h + out
+        h, _ = _ffn_residual(h, lp, cfg, lora_l=lora_l, lora_mask=lmask,
+                             ls=ls)
+        masses = scoring.chunk_column_masses(
+            q, k_buf, q_offset=n_total, window=layer_window(a, flag),
+        ) / jnp.float32(n_obs)
+        return h, {"k": k_buf, "v": v_buf, "obs": masses}
+
+    _, ys = jax.lax.scan(body, h, xs)
+    return ys["k"], ys["v"], ys["obs"]
+
+
+def prefill_finalize(
+    params: dict,
+    cfg: ModelConfig,
+    state: ChunkState,
+    n_total: jnp.ndarray,  # () int32 true prompt length
+    *,
+    policy: str,
+    evict: Optional[EvictionConfig] = None,
+    lkv_params: Optional[dict] = None,
+    obs_tokens: Optional[jnp.ndarray] = None,  # (B, n_obs) gt_oracle only
+    extra_slots: int = 0,
+    seeds: Optional[jnp.ndarray] = None,  # (B,) request seeds (random policy)
+) -> dict:
+    """Close a streaming prefill: run the deferred observation pass (if the
+    policy has one), turn the accumulated ``ScoreState`` into eviction
+    scores, and run ``evict_layer`` once per layer over the materialized
+    buffer — producing the same decode-cache pytree as monolithic
+    ``prefill`` (same kept slots; shapes sized by the buffer depth, with
+    surplus slots masked invalid)."""
+    a = cfg.attn
+    lk = cfg.lookahead
+    evict = evict or EvictionConfig()
+    L, B, K = state.k.shape[:3]
+    kbuf, vbuf = state.k, state.v
+    obs_masses = None
+    if policy in scoring.FINAL_OBS:
+        kbuf, vbuf, obs_masses = _chunk_observation_pass(
+            params, cfg, state, n_total, policy=policy,
+            lkv_params=lkv_params, obs_tokens=obs_tokens,
+        )
+    budgets, _ = _policy_budget_schedule(
+        cfg, policy, evict.budget if policy != "full" else K,
+        evict.pyramid_beta,
+    )
+    capacity = decode_cache_capacity(cfg, policy, evict, n_keys_max=K)
+    adaptive = evict.head_alloc == "adaptive" and policy not in ("full",)
+    key_mask = jnp.broadcast_to(jnp.arange(K)[None] < n_total, (B, K))
+    flags = is_global_flags(cfg)
+
+    xs: dict = {"k": kbuf, "v": vbuf, "budget": budgets}
+    if flags is not None:
+        xs["flag"] = jnp.asarray(flags)
+    if state.score.acc is not None:
+        xs["acc"] = state.score.acc
+    if state.score.qbuf is not None:
+        xs["qbuf"] = state.score.qbuf
+    if obs_masses is not None:
+        xs["obs"] = obs_masses
+
+    def body(carry, x):
+        flag = x.get("flag", True)
+        if policy in OBS_POLICIES:
+            s_kv = scoring.finalize_layer_scores(
+                policy, x["k"], n_total,
+                acc_l=x.get("acc"), cnt=state.score.cnt,
+                qbuf_l=x.get("qbuf"), obs_masses_l=x.get("obs"),
+                num_kv_heads=a.num_kv_heads,
+                pool_kernel=lk.pool_kernel if lk else 7,
+                window_size=lk.window_size if lk else 32,
+                window=layer_window(a, flag),
+            )
+        else:
+            s_kv = ev.position_scores(
+                policy, K, B, a.num_kv_heads, sink=evict.sink, seeds=seeds,
+            )
+            s_kv = jnp.where(key_mask[:, None, :], s_kv, -1e30)
+        hb = None
+        if adaptive:
+            hb = ev.adaptive_head_budgets(
+                jnp.maximum(s_kv, 0.0), evict.budget, capacity)
+        cache_l = ev.evict_layer(
+            s_kv, x["k"], x["v"], capacity,
+            layer_budget=None if adaptive else x.get("budget"),
+            head_budgets=hb, extra_slots=extra_slots, key_mask=key_mask,
+        )
+        return carry, dict(cache_l._asdict())
+
+    _, attn_cache = jax.lax.scan(body, 0, xs)
+    return {
+        "attn": attn_cache,
+        "cursor": jnp.asarray(capacity, jnp.int32),
+        "next_pos": jnp.broadcast_to(n_total, (B, 1)).astype(jnp.int32),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -805,16 +1105,7 @@ def decode_step(
             else:
                 h = h + attn_mod.cross_attention(lp["cross"], a, u,
                                                  x["ck"], x["cv"])
-        if cfg.moe is not None:
-            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
-            if cfg.moe.dispatch == "sparse":
-                mo, _ = moe_mod.apply_sparse(lp["moe"], cfg, u)
-            else:
-                mo, _ = moe_mod.apply(lp["moe"], cfg, u)
-            h = h + mo
-        elif cfg.d_ff > 0:
-            u = rms_norm(h, lp["ln2"], cfg.norm_eps)
-            h = h + mlp_mod.apply(lp["mlp"], cfg, u)
+        h, _ = _ffn_residual(h, lp, cfg)
         return h, ys
 
     h, ys = jax.lax.scan(body, h, xs)

@@ -1,18 +1,24 @@
-"""Serving subsystem: lockstep and continuous-batching engines.
+"""Serving subsystem: chunked continuous batching (+ deprecated baselines).
 
-    scheduler.py — request state machine, FCFS queue, fixed decode slots
-    batching.py  — prompt-length buckets + the jit compile cache
-    engine.py    — ServingEngine (lockstep) and ContinuousEngine
+    scheduler.py — request state machine, FCFS queue, fixed decode slots,
+                   the token-budget step planner (``plan_step``)
+    batching.py  — ChunkCompileCache (keyed (chunk, batch, policy)) and the
+                   deprecated bucket utilities
+    engine.py    — ContinuousEngine (chunked prefill interleaved with
+                   decode); deprecated ServingEngine (lockstep) and
+                   BucketedEngine (pad-to-bucket prefill)
 """
 
-from repro.serving.batching import (DEFAULT_BUCKETS, PrefillCompileCache,
-                                    batch_bucket, bucket_for, pad_to_bucket)
-from repro.serving.engine import (ContinuousEngine, Request, RequestState,
-                                  ServingEngine, cache_bytes)
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
+                                    PrefillCompileCache, batch_bucket,
+                                    bucket_for, pad_to_bucket)
+from repro.serving.engine import (BucketedEngine, ContinuousEngine, Request,
+                                  RequestState, ServingEngine, cache_bytes)
+from repro.serving.scheduler import SlotScheduler, plan_step
 
 __all__ = [
-    "ContinuousEngine", "DEFAULT_BUCKETS", "PrefillCompileCache", "Request",
-    "RequestState", "ServingEngine", "SlotScheduler", "batch_bucket",
-    "bucket_for", "cache_bytes", "pad_to_bucket",
+    "BucketedEngine", "ChunkCompileCache", "ContinuousEngine",
+    "DEFAULT_BUCKETS", "PrefillCompileCache", "Request", "RequestState",
+    "ServingEngine", "SlotScheduler", "batch_bucket", "bucket_for",
+    "cache_bytes", "pad_to_bucket", "plan_step",
 ]

@@ -1,26 +1,98 @@
-"""Prompt-length bucketing and the bucketed jit compile cache.
+"""Serving compile caches: the chunked cache, and the deprecated buckets.
 
 Serving traffic has arbitrary prompt lengths; XLA programs have static
-shapes.  The bridge is a small set of *buckets*: prompts are right-padded
-to the nearest bucket and prefill programs are compiled once per
-``(bucket, batch, policy, padded)`` key.  Batch sizes are bucketed to
-powers of two for the same reason — a 3-request admission group runs the
-batch-4 program with one dummy row rather than compiling a batch-3 one.
+shapes.  The current bridge is *chunked prefill*: prompts stream through a
+fixed ``(batch, chunk)`` token program whose chunk offset and true prompt
+length are **traced** arguments, so ``ChunkCompileCache`` compiles exactly
+one prefill-step program and one finalize program per
+``(chunk, batch, policy)`` — prompt length never enters the key.  The only
+recompile source left is KV-buffer growth when a prompt exceeds the
+engine's current context capacity (geometric, so O(log max_len) compiles
+over a serving lifetime), which ``compile_count()`` makes observable.
 
-``PrefillCompileCache`` is deliberately explicit (rather than leaning on
-``jax.jit``'s internal shape cache): keys can be warmed ahead of traffic,
-and hit/miss/compile counts are observable — recompiles in the serving
-hot path are a bug, and this makes them visible.
+The previous bridge — pad-to-bucket prefill with programs per
+``(bucket, batch, policy, padded)`` — is **deprecated** but kept importable
+(``bucket_for`` / ``pad_to_bucket`` / ``batch_bucket`` /
+``PrefillCompileCache``) so ``BucketedEngine`` can still serve as the
+benchmark baseline; see ``benchmarks/bench_serving.py``.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable
 
 import jax
 import numpy as np
 
 DEFAULT_BUCKETS = (32, 64, 128, 256, 512, 1024)
+
+
+def _compile_count(fns: dict) -> int:
+    """Actual XLA compilations across jitted entries (cache entries ×
+    traced shape signatures); falls back to one per entry when the private
+    jit API is unavailable."""
+    total = 0
+    for fn in fns.values():
+        try:
+            total += fn._cache_size()
+        except Exception:  # pragma: no cover - older jax
+            total += 1
+    return total
+
+
+class ChunkCompileCache:
+    """jit compile cache for chunked prefill, keyed ``(kind, chunk, batch,
+    policy)`` — no prompt-length ladder, no padded/exact split.
+
+    ``build(kind, policy)`` returns the python callable to jit (``kind`` is
+    ``"chunk"`` for the per-chunk step or ``"finalize"`` for the
+    evict-at-prompt-end program).  ``compile_count()`` reports actual XLA
+    compilations (cache entries × traced shape signatures), so buffer-growth
+    recompiles are visible alongside key misses.
+    """
+
+    def __init__(self, build: Callable[[str, str], Callable]):
+        self._build = build
+        self._fns: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, kind: str, chunk: int, batch: int, policy: str):
+        key = (kind, chunk, batch, policy)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = jax.jit(self._build(kind, policy))
+            self._fns[key] = fn
+        else:
+            self.hits += 1
+        return fn
+
+    @property
+    def keys(self):
+        return sorted(self._fns)
+
+    def compile_count(self) -> int:
+        return _compile_count(self._fns)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._fns), "hits": self.hits,
+                "misses": self.misses, "compiles": self.compile_count()}
+
+
+# ---------------------------------------------------------------------------
+# Deprecated: prompt-length buckets (kept for BucketedEngine comparisons)
+# ---------------------------------------------------------------------------
+
+
+def _warn_bucketed(what: str) -> None:
+    warnings.warn(
+        f"{what} is deprecated: chunked prefill (ChunkCompileCache + the "
+        "chunked ContinuousEngine) replaced the bucket ladder; the bucketed "
+        "utilities remain only so BucketedEngine can serve as a benchmark "
+        "baseline", DeprecationWarning, stacklevel=3,
+    )
 
 
 def next_pow2(n: int) -> int:
@@ -30,30 +102,24 @@ def next_pow2(n: int) -> int:
     return p
 
 
-def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
-    """Smallest configured bucket >= n; beyond the largest, the next power
-    of two (the compile cache keeps working for outlier prompts)."""
+# private non-warning forms: BucketedEngine (itself deprecated, warned once
+# at construction) uses these internally so the warning fires only at the
+# public entry points
+
+def _bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
     return next_pow2(n)
 
 
-def batch_bucket(n: int, cap: int) -> int:
-    """Compile batch size for an n-request group: next power of two, capped."""
+def _batch_bucket(n: int, cap: int) -> int:
     assert n > 0 and cap > 0
     return min(next_pow2(n), cap)
 
 
-def pad_to_bucket(
-    prompts: list, bucket: int, batch: int, *, pad_id: int = 0
-) -> tuple[np.ndarray, np.ndarray]:
-    """Right-pad prompts to ``bucket`` and the group to ``batch`` rows.
-
-    Returns (tokens (batch, bucket) int32, lens (batch,) int32).  Dummy
-    rows carry lens == bucket so they take the unmasked fast path; their
-    outputs are discarded by the caller.
-    """
+def _pad_to_bucket(prompts: list, bucket: int, batch: int, *,
+                   pad_id: int = 0) -> tuple[np.ndarray, np.ndarray]:
     assert len(prompts) <= batch
     tokens = np.full((batch, bucket), pad_id, np.int32)
     lens = np.full((batch,), bucket, np.int32)
@@ -65,8 +131,39 @@ def pad_to_bucket(
     return tokens, lens
 
 
+def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Deprecated.  Smallest configured bucket >= n; beyond the largest, the
+    next power of two (the compile cache keeps working for outlier
+    prompts)."""
+    _warn_bucketed("bucket_for")
+    return _bucket_for(n, buckets)
+
+
+def batch_bucket(n: int, cap: int) -> int:
+    """Deprecated.  Compile batch size for an n-request group: next power of
+    two, capped."""
+    _warn_bucketed("batch_bucket")
+    return _batch_bucket(n, cap)
+
+
+def pad_to_bucket(
+    prompts: list, bucket: int, batch: int, *, pad_id: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Deprecated.  Right-pad prompts to ``bucket`` and the group to
+    ``batch`` rows.
+
+    Returns (tokens (batch, bucket) int32, lens (batch,) int32).  Dummy
+    rows carry lens == bucket so they take the unmasked fast path; their
+    outputs are discarded by the caller.
+    """
+    _warn_bucketed("pad_to_bucket")
+    return _pad_to_bucket(prompts, bucket, batch, pad_id=pad_id)
+
+
 class PrefillCompileCache:
-    """jit compile cache keyed on ``(bucket, batch, policy, padded)``.
+    """Deprecated.  jit compile cache keyed ``(bucket, batch, policy,
+    padded)`` — the bucket-ladder predecessor of ``ChunkCompileCache``,
+    kept for ``BucketedEngine``.
 
     ``build(policy, padded)`` returns the python callable to jit; the
     ``padded`` variant threads per-request ``prompt_lens`` masking through
@@ -75,6 +172,7 @@ class PrefillCompileCache:
     """
 
     def __init__(self, build: Callable[[str, bool], Callable]):
+        _warn_bucketed("PrefillCompileCache")
         self._build = build
         self._fns: dict = {}
         self.hits = 0
@@ -101,6 +199,9 @@ class PrefillCompileCache:
     @property
     def keys(self):
         return sorted(self._fns)
+
+    def compile_count(self) -> int:
+        return _compile_count(self._fns)
 
     def stats(self) -> dict:
         return {"entries": len(self._fns), "hits": self.hits,

@@ -1,27 +1,44 @@
-"""Serving engines: lockstep (paper-shaped) and continuous batching.
+"""Serving engines: chunked continuous batching (current), plus the
+deprecated lockstep and bucketed engines kept as benchmark baselines.
 
-``ServingEngine`` is the original compact shape: one same-length batch at a
-time, prefill and decode in lockstep.  ``ContinuousEngine`` decouples the
-two phases behind a slot scheduler (scheduler.py) and a bucketed compile
-cache (batching.py):
+``ContinuousEngine`` streams prefill in fixed-size chunks and interleaves
+them with decode (vLLM-style mixed steps):
 
-    arrivals ──> FCFS queue ──> per-bucket prefill ──> decode slots
-                                   (pad-to-bucket,       (one slot-batched
-                                    compile cache)        chunked loop)
+    arrivals ──> FCFS queue ──> chunked prefill ──> decode slots
+                                 (one compiled       (one slot-batched
+                                  (1, chunk) step,    chunked loop)
+                                  streaming scores)
+                        ▲                    │
+                        └── token-budget step: every iteration runs one
+                            decode chunk for the live slots *and* up to
+                            budget/chunk prefill chunks of the in-flight
+                            prompt — decode never stalls behind a prompt,
+                            and prompt length is bounded by HBM (the KV
+                            buffer grows geometrically), not by a bucket
+                            table.
 
-Finished requests retire and queued requests are inserted into the freed
-slots mid-stream.  This is enabled precisely by the paper's eviction: every
-request's post-eviction decode cache has the same static shape
-``(budget_capacity + margin)`` regardless of its original prompt length, so
-a freshly prefilled request's cache pytree can be scattered into the live
-decode cache (``transformer.insert_request_cache``) without reshaping —
-cache bytes stay O(budget), and the decode batch stays full under
-heterogeneous traffic.
+Admission still exploits the paper's eviction: every request's
+post-eviction decode cache has the same static shape
+``(budget_capacity + margin)`` regardless of prompt length, so a freshly
+prefilled request's cache pytree is scattered into any free slot of the
+live decode cache (``transformer.insert_request_cache``) without
+reshaping.
+
+Deprecated (importable, warn on construction):
+
+* ``ServingEngine`` — the paper-shaped lockstep engine (one same-length
+  batch, prefill and decode back-to-back).
+* ``BucketedEngine`` — the previous continuous engine: pad-to-bucket
+  prefill with a compile cache keyed ``(bucket, batch, policy, padded)``.
+  A long prompt monopolizes the device for its whole (monolithic) prefill
+  and prompts beyond the largest bucket force fresh compiles; kept so
+  ``benchmarks/bench_serving.py`` can quantify exactly that.
 """
 
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -31,12 +48,14 @@ import numpy as np
 from repro.common.config import EvictionConfig, ModelConfig
 from repro.core import policies
 from repro.models import transformer as tf
-from repro.serving.batching import (DEFAULT_BUCKETS, PrefillCompileCache,
-                                    batch_bucket, bucket_for, pad_to_bucket)
-from repro.serving.scheduler import Request, RequestState, SlotScheduler
+from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
+                                    PrefillCompileCache, _batch_bucket,
+                                    _bucket_for, _pad_to_bucket)
+from repro.serving.scheduler import (Request, RequestState, SlotScheduler,
+                                     plan_step)
 
 __all__ = ["Request", "RequestState", "ServingEngine", "ContinuousEngine",
-           "cache_bytes"]
+           "BucketedEngine", "cache_bytes"]
 
 
 def cache_bytes(cfg: ModelConfig, capacity: int, n_in: int) -> dict:
@@ -51,9 +70,14 @@ def cache_bytes(cfg: ModelConfig, capacity: int, n_in: int) -> dict:
     }
 
 
+def _request_seeds(requests) -> jnp.ndarray:
+    return jnp.asarray([r.eviction_seed for r in requests], jnp.int32)
+
+
 class ServingEngine:
-    """Lockstep batch engine: every request in a batch shares one prompt
-    length, and prefill/decode run back-to-back for the whole batch."""
+    """Deprecated lockstep batch engine: every request in a batch shares one
+    prompt length, and prefill/decode run back-to-back for the whole batch.
+    Kept as the paper-shaped baseline for benchmarks and exactness tests."""
 
     def __init__(
         self,
@@ -69,6 +93,9 @@ class ServingEngine:
         eos_id: int = 0,
         decode_evict: bool = False,
     ):
+        warnings.warn(
+            "ServingEngine (lockstep) is deprecated; serve through the "
+            "chunked ContinuousEngine", DeprecationWarning, stacklevel=2)
         self.params, self.cfg = params, cfg
         self.policy = policy
         self.evict = evict if evict is not None else EvictionConfig()
@@ -85,11 +112,12 @@ class ServingEngine:
         self._decode_fn = jax.jit(self._decode)
 
     # -- jit bodies ---------------------------------------------------------
-    def _prefill(self, params, lkv, tokens):
+    def _prefill(self, params, lkv, tokens, seeds):
         res = policies.run_eviction(
             self.policy, params, self.cfg, tokens, evict=self.evict,
             lkv_params=lkv, draft_params=self.draft_params,
             draft_cfg=self.draft_cfg, extra_slots=self.decode_margin,
+            seeds=seeds,
         )
         if self.decode_evict:
             res = res._replace(cache=tf.add_decode_eviction_scores(res.cache))
@@ -111,10 +139,11 @@ class ServingEngine:
         assert requests, "empty batch"
         n_in = len(requests[0].prompt)
         assert all(len(r.prompt) == n_in for r in requests), \
-            "bucket requests by prompt length"
+            "batch requests by prompt length"
         tokens = jnp.asarray(np.stack([r.prompt for r in requests]))
         t0 = time.perf_counter()
-        res = self._prefill_fn(self.params, self.lkv_params, tokens)
+        res = self._prefill_fn(self.params, self.lkv_params, tokens,
+                               _request_seeds(requests))
         res.logits.block_until_ready()
         ttft = time.perf_counter() - t0
         first = jnp.argmax(res.logits, -1)[:, None].astype(jnp.int32)
@@ -136,17 +165,323 @@ class ServingEngine:
         return cache_bytes(self.cfg, cap, n_in)
 
 
-class ContinuousEngine:
-    """Continuous-batching engine: a slot-batched decode loop with
-    per-bucket prefill and mid-stream admission/retirement.
+class _InflightPrefill:
+    """Host-side cursor of the one streaming prefill in flight."""
 
-    The decode loop runs in *chunks* (a jitted ``lax.scan`` of 1/2/4/…
-    steps with a per-slot active mask) so host dispatch is amortized while
-    admission latency stays bounded; chunk length tracks the *longest*
-    remaining token budget among live slots, so a nearly-finished slot may
-    overshoot its budget inside a chunk — the surplus tokens are truncated
-    at collect time (greedy decode is prefix-stable, so truncation never
-    changes the kept tokens) and the slot retires at the chunk boundary.
+    __slots__ = ("req", "state", "n", "s", "logits")
+
+    def __init__(self, req: Request, state, n: int):
+        self.req, self.state, self.n = req, state, n
+        self.s = 0
+        self.logits = None
+
+
+class _SlotDecodeMixin:
+    """The slot-batched decode loop shared by both continuous engines:
+    jitted chunks of 1/2/4/… steps with per-slot cursors and an active
+    mask.  Expects ``self.params/cfg/eos_id/_chunks`` and a
+    ``self._decode_fns`` dict."""
+
+    #: decode chunk lengths we are willing to compile
+    _CHUNK_SIZES = (1, 2, 4, 8, 16)
+
+    def _decode_fn(self, steps: int):
+        fn = self._decode_fns.get(steps)
+        if fn is None:
+            def body(params, tok, cache, active):
+                return policies.decode_chunk(
+                    params, self.cfg, tok, cache, steps, active=active)
+
+            fn = jax.jit(body)
+            self._decode_fns[steps] = fn
+        return fn
+
+    def _pick_chunk(self, remaining, active) -> int:
+        """Largest configured chunk no bigger than the *longest* remaining
+        stream: slots that finish mid-chunk simply have their surplus tokens
+        truncated at collect time (greedy decode makes outputs prefix-stable,
+        so overshoot wastes a few slot-steps but never changes tokens), which
+        keeps the host-dispatch count low near retirements."""
+        if not active.any():
+            return 1
+        room = max(int(remaining[active].max()), 1)
+        steps = 1
+        for c in self._chunks:
+            if c <= room:
+                steps = c
+        return steps
+
+    def _collect(self, toks, steps, sched, active, remaining, last_emit, t0):
+        now = time.perf_counter() - t0
+        for slot in np.nonzero(active)[0]:
+            r = sched.running[slot]
+            r.max_gap_s = max(r.max_gap_s, now - last_emit[slot])
+            last_emit[slot] = now
+            take = min(steps, int(remaining[slot]))  # drop overshoot tokens
+            finished = False
+            for t in toks[slot, :take].tolist():
+                r.out_tokens.append(int(t))
+                if int(t) == self.eos_id:
+                    finished = True
+                    break
+            remaining[slot] -= steps
+            if finished or remaining[slot] <= 0:
+                sched.retire(r, now=now)
+                active[slot] = False
+
+
+class ContinuousEngine(_SlotDecodeMixin):
+    """Chunked continuous-batching engine: streaming prefill interleaved
+    with a slot-batched decode loop under a token-budget step.
+
+    Prefill runs the fixed ``(1, chunk)`` program of
+    ``transformer.prefill_chunk`` — chunk offset and true prompt length are
+    traced, so the compile cache holds exactly one step program and one
+    finalize program per ``(chunk, batch, policy)`` key regardless of
+    traffic shape.  Streaming ``ScoreState`` accumulation makes the final
+    eviction identical to monolithic prefill (see tests/test_chunked_
+    prefill.py), so serving tokens still match the isolated lockstep
+    engine bit-for-bit.
+
+    The decode loop is unchanged from the bucketed engine: jitted chunks of
+    1/2/4/… steps with per-slot cursors and an active mask; a slot that
+    finishes mid-chunk has its surplus tokens truncated at collect time
+    (greedy decode is prefix-stable) and retires at the chunk boundary.
+    """
+
+    def __init__(
+        self,
+        params: dict,
+        cfg: ModelConfig,
+        *,
+        policy: str = "lookaheadkv",
+        evict: Optional[EvictionConfig] = None,
+        lkv_params: Optional[dict] = None,
+        num_slots: int = 4,
+        chunk: int = 128,
+        max_context: int = 1024,  # initial KV-buffer depth; grows on demand
+        token_budget: Optional[int] = None,
+        max_new_tokens: int = 64,  # per-request cap (sizes the cache margin)
+        eos_id: int = 0,
+        decode_evict: bool = False,
+        decode_chunk: int = 8,
+    ):
+        assert tf.chunkable(cfg), \
+            "chunked continuous batching serves attention-only decoder archs"
+        assert policy in policies.SINGLE_PASS and policy != "gt_oracle", \
+            "multi-pass policies (and gt_oracle) cannot stream; use " \
+            "BucketedEngine for those baselines"
+        assert policy != "full", \
+            "policy 'full' caches whole prompts — its decode cache is not " \
+            "shape-uniform; use BucketedEngine"
+        self.params, self.cfg = params, cfg
+        self.policy = policy
+        self.evict = evict if evict is not None else EvictionConfig()
+        self.lkv_params = lkv_params
+        self.num_slots = num_slots
+        self.chunk = chunk
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+        self.decode_evict = decode_evict
+        self.decode_margin = (8 if decode_evict else max_new_tokens + 1)
+        self._chunks = tuple(c for c in self._CHUNK_SIZES if c <= decode_chunk)
+        self.token_budget = token_budget or (chunk + num_slots * decode_chunk)
+        # the decode-slot capacity must be budget-bound, not context-bound,
+        # so context growth never reshapes the live cache
+        self.capacity = tf.decode_cache_capacity(
+            cfg, policy, self.evict, n_keys_max=1 << 30)
+        # context rungs are chunk * 2^k.  All standard traffic (prompts
+        # within ``max_context``) shares the single base rung — one
+        # compiled chunk shape; longer prompts climb to the smallest rung
+        # that fits, so a 16k outlier neither inflates the prefill cost of
+        # later short prompts (it gets its own rung) nor adds more than
+        # O(log max_len) compiled shapes over a serving lifetime
+        self._base_cap = self._rung(max(max_context, self.capacity))
+        self._ctx_cap = self._base_cap  # high-water mark (observability)
+        self.chunk_cache = ChunkCompileCache(self._build)
+        self._decode_fns: dict = {}
+        self._insert_fn = jax.jit(tf.insert_request_cache)
+        self.stats: dict = {}
+
+    # -- compile-cache bodies ------------------------------------------------
+    def _build(self, kind: str, policy: str):
+        if kind == "chunk":
+            def fn(params, state, tokens, n_total):
+                return tf.prefill_chunk(params, self.cfg, state, tokens,
+                                        n_total, policy=policy)
+        else:  # finalize
+            def fn(params, lkv, state, n_total, seeds):
+                cache = tf.prefill_finalize(
+                    params, self.cfg, state, n_total, policy=policy,
+                    evict=self.evict, lkv_params=lkv,
+                    extra_slots=self.decode_margin, seeds=seeds,
+                )
+                if self.decode_evict:
+                    cache = tf.add_decode_eviction_scores(cache)
+                return cache
+
+        return fn
+
+    # -- geometry ------------------------------------------------------------
+    def _rung(self, need: int) -> int:
+        """Smallest chunk * 2^k >= ``need`` (the geometric buffer ladder)."""
+        r = self.chunk
+        while r < need:
+            r *= 2
+        return r
+
+    def _request_context(self, n_prompt: int) -> int:
+        """KV-buffer depth for one request: the base rung for everything
+        within ``max_context``, else the smallest ladder rung that fits the
+        prompt + observation rows.  A new rung recompiles the two chunk
+        programs once — O(log max_len) compiles over a serving lifetime,
+        vs one per bucket for the deprecated ladder."""
+        need = policies.chunk_capacity_for(self.cfg, self.policy, n_prompt,
+                                           self.chunk)
+        cap = max(self._rung(need), self._base_cap)
+        self._ctx_cap = max(self._ctx_cap, cap)  # high-water mark
+        return cap
+
+    def cache_bytes(self, n_in: int) -> dict:
+        return cache_bytes(self.cfg, self.capacity + self.decode_margin, n_in)
+
+    def warmup(self, prompt_lens=(), batch_sizes=(1,)) -> None:
+        """Pre-instantiate the (chunk, batch, policy) compile-cache entries.
+        ``prompt_lens`` only pre-sizes the KV-buffer ladder — prompt length
+        is a traced argument, not a compile key."""
+        for n in prompt_lens:
+            self._request_context(n)
+        self.chunk_cache.get("chunk", self.chunk, 1, self.policy)
+        self.chunk_cache.get("finalize", self.chunk, 1, self.policy)
+
+    # -- serving loop --------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve ``requests`` to completion; returns them in finish order.
+
+        ``arrival_s`` offsets are interpreted on the wall clock relative to
+        the start of the call.  Each loop iteration is one token-budget
+        step: at most ``plan_step(...)`` prefill chunks of the in-flight
+        prompt, then one decode chunk for every live slot — so no live
+        slot's decode ever waits longer than one step behind a prompt of
+        *any* length.
+        """
+        sched = SlotScheduler(self.num_slots, bucket_for=lambda n: self.chunk,
+                              max_prefill_batch=1)
+        for r in requests:
+            assert r.max_new_tokens <= self.max_new_tokens, \
+                "request exceeds the engine's max_new_tokens cache margin"
+            sched.submit(r)
+        t0 = time.perf_counter()
+        live = tf.init_decode_cache(self.cfg, self.num_slots,
+                                    self.capacity + self.decode_margin,
+                                    per_slot_cursor=True)
+        if self.decode_evict:
+            live = tf.add_decode_eviction_scores(live)
+        tok = jnp.zeros((self.num_slots, 1), jnp.int32)
+        active = np.zeros(self.num_slots, bool)
+        remaining = np.zeros(self.num_slots, np.int64)
+        last_emit = np.zeros(self.num_slots, np.float64)
+        pf: Optional[_InflightPrefill] = None
+        self.stats = {"prefill_chunks": 0, "decode_chunks": 0,
+                      "max_prefill_between_decode": 0}
+        since_decode = 0
+
+        while sched.has_work() or pf is not None:
+            now = time.perf_counter() - t0
+            if pf is None:
+                req = sched.next_request(now)
+                if req is not None:
+                    pf = self._begin_prefill(req)
+            if pf is not None:
+                steps = self._pick_chunk(remaining, active) if active.any() \
+                    else max(self._chunks)
+                _, n_chunks = plan_step(
+                    token_budget=self.token_budget, chunk=self.chunk,
+                    n_active=int(active.sum()), decode_steps=steps,
+                    prefill_pending=True,
+                )
+                for _ in range(n_chunks):
+                    self._prefill_step(pf)
+                    if active.any():  # only live slots can be stalled
+                        since_decode += 1
+                    if pf.s >= pf.n:
+                        tok, live = self._admit(pf, sched, tok, live, active,
+                                                remaining, last_emit, t0)
+                        pf = None
+                        break
+            if active.any():
+                self.stats["max_prefill_between_decode"] = max(
+                    self.stats["max_prefill_between_decode"], since_decode)
+                since_decode = 0
+                steps = self._pick_chunk(remaining, active)
+                fn = self._decode_fn(steps)
+                tok, live, toks = fn(self.params, tok, live,
+                                     jnp.asarray(active))
+                self.stats["decode_chunks"] += 1
+                self._collect(np.asarray(toks), steps, sched, active,
+                              remaining, last_emit, t0)
+            elif pf is None:
+                if sched.has_arrived(time.perf_counter() - t0):
+                    continue  # a request is admissible right now
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break  # defensive: nothing queued, nothing running
+                wait = nxt - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        return sched.finished
+
+    # -- internals -----------------------------------------------------------
+    def _begin_prefill(self, req: Request) -> _InflightPrefill:
+        n = len(req.prompt)
+        state = tf.init_chunk_state(self.cfg, self.policy, 1,
+                                    self._request_context(n))
+        return _InflightPrefill(req, state, n)
+
+    def _prefill_step(self, pf: _InflightPrefill) -> None:
+        blk = np.zeros((1, self.chunk), np.int32)
+        seg = pf.req.prompt[pf.s:pf.s + self.chunk]
+        blk[0, :len(seg)] = seg
+        fn = self.chunk_cache.get("chunk", self.chunk, 1, self.policy)
+        pf.state, pf.logits = fn(self.params, pf.state, jnp.asarray(blk),
+                                 jnp.asarray(pf.n, jnp.int32))
+        pf.s += self.chunk
+        self.stats["prefill_chunks"] += 1
+
+    def _admit(self, pf, sched, tok, live, active, remaining, last_emit, t0):
+        r = pf.req
+        fn = self.chunk_cache.get("finalize", self.chunk, 1, self.policy)
+        seeds = _request_seeds([r])
+        cache = fn(self.params, self.lkv_params, pf.state,
+                   jnp.asarray(pf.n, jnp.int32), seeds)
+        pf.logits.block_until_ready()
+        now = time.perf_counter() - t0
+        first = int(jnp.argmax(pf.logits[0]))
+        slot = sched.place(r)
+        live = self._insert_fn(live, cache, slot)
+        tok = tok.at[slot, 0].set(first)
+        r.out_tokens = [first]
+        r.first_token_s = now
+        r.ttft_s = now - r.enqueue_s
+        last_emit[slot] = now
+        if first == self.eos_id or r.max_new_tokens <= 1:
+            sched.retire(r, now=now)
+            active[slot] = False
+        else:
+            active[slot] = True
+            remaining[slot] = r.max_new_tokens - 1
+        return tok, live
+
+
+class BucketedEngine(_SlotDecodeMixin):
+    """Deprecated continuous-batching engine with pad-to-bucket prefill.
+
+    A slot-batched decode loop (``_SlotDecodeMixin``) fed by per-bucket
+    *monolithic* prefill: one compile per ``(bucket, batch, policy,
+    padded)`` key, prompts beyond the largest bucket escalate to
+    power-of-two buckets, and every live decode slot stalls for the whole
+    prefill of an admitted prompt.  Kept (with its exactness guarantees)
+    as the benchmark baseline the chunked engine is measured against.
 
     Exactness: tokens match isolated lockstep serving bit-for-bit for
     ``lookaheadkv`` and the position policies even when prompts are padded
@@ -157,9 +492,6 @@ class ContinuousEngine:
     Multi-pass policies (laq/speckv) are grouped by exact prompt length
     instead of bucketed.
     """
-
-    #: decode chunk lengths we are willing to compile
-    _CHUNK_SIZES = (1, 2, 4, 8, 16)
 
     def __init__(
         self,
@@ -179,6 +511,10 @@ class ContinuousEngine:
         decode_evict: bool = False,
         decode_chunk: int = 8,
     ):
+        warnings.warn(
+            "BucketedEngine (pad-to-bucket prefill) is deprecated; serve "
+            "through the chunked ContinuousEngine", DeprecationWarning,
+            stacklevel=2)
         assert cfg.uses_attention and not cfg.uses_ssm \
             and not cfg.is_encoder_decoder, \
             "continuous batching serves attention-only archs"
@@ -201,18 +537,20 @@ class ContinuousEngine:
         self._exact_only = policy in policies.MULTI_PASS
         self.capacity = tf.decode_cache_capacity(
             cfg, policy, self.evict, n_keys_max=max(self.buckets))
-        self.prefill_cache = PrefillCompileCache(self._build_prefill)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            self.prefill_cache = PrefillCompileCache(self._build_prefill)
         self._decode_fns: dict = {}
         self._insert_fn = jax.jit(tf.insert_request_cache)
 
     # -- compile-cache bodies ------------------------------------------------
     def _build_prefill(self, policy: str, padded: bool):
-        def fn(params, lkv, tokens, lens):
+        def fn(params, lkv, tokens, lens, seeds):
             res = policies.run_eviction(
                 policy, params, self.cfg, tokens, evict=self.evict,
                 lkv_params=lkv, draft_params=self.draft_params,
                 draft_cfg=self.draft_cfg, extra_slots=self.decode_margin,
-                prompt_lens=lens if padded else None,
+                prompt_lens=lens if padded else None, seeds=seeds,
             )
             if self.decode_evict:
                 res = res._replace(
@@ -221,22 +559,11 @@ class ContinuousEngine:
 
         return fn
 
-    def _decode_fn(self, steps: int):
-        fn = self._decode_fns.get(steps)
-        if fn is None:
-            def body(params, tok, cache, active):
-                return policies.decode_chunk(
-                    params, self.cfg, tok, cache, steps, active=active)
-
-            fn = jax.jit(body)
-            self._decode_fns[steps] = fn
-        return fn
-
     # -- geometry ------------------------------------------------------------
     def _bucket(self, n: int) -> int:
         if self._exact_only:
             return n
-        b = bucket_for(n, self.buckets)
+        b = _bucket_for(n, self.buckets)
         if self.policy == "full" and b > max(self.buckets):
             raise ValueError(
                 f"policy 'full' caches whole prompts; len {n} exceeds the "
@@ -252,7 +579,7 @@ class ContinuousEngine:
         for n in prompt_lens:
             b = self._bucket(n)
             for nb in batch_sizes:
-                nb = batch_bucket(nb, self.max_prefill_batch)
+                nb = _batch_bucket(nb, self.max_prefill_batch)
                 keys.append((b, nb, self.policy, n != b))
         self.prefill_cache.warm(keys)
 
@@ -280,6 +607,7 @@ class ContinuousEngine:
         tok = jnp.zeros((self.num_slots, 1), jnp.int32)
         active = np.zeros(self.num_slots, bool)
         remaining = np.zeros(self.num_slots, np.int64)
+        last_emit = np.zeros(self.num_slots, np.float64)
 
         while sched.has_work():
             # admission: fill freed slots from the queue, one bucket group
@@ -292,14 +620,14 @@ class ContinuousEngine:
                 if not group:
                     break
                 tok, live = self._admit(group, sched, tok, live, active,
-                                        remaining, t0)
+                                        remaining, last_emit, t0)
             if active.any():
                 steps = self._pick_chunk(remaining, active)
                 fn = self._decode_fn(steps)
                 tok, live, toks = fn(self.params, tok, live,
                                      jnp.asarray(active))
                 self._collect(np.asarray(toks), steps, sched, active,
-                              remaining, t0)
+                              remaining, last_emit, t0)
             else:
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -310,28 +638,19 @@ class ContinuousEngine:
         return sched.finished
 
     # -- internals -----------------------------------------------------------
-    def _pick_chunk(self, remaining, active) -> int:
-        """Largest configured chunk no bigger than the *longest* remaining
-        stream: slots that finish mid-chunk simply have their surplus tokens
-        truncated at collect time (greedy decode makes outputs prefix-stable,
-        so overshoot wastes a few slot-steps but never changes tokens), which
-        keeps the host-dispatch count low near retirements."""
-        room = max(int(remaining[active].max()), 1)
-        steps = 1
-        for c in self._chunks:
-            if c <= room:
-                steps = c
-        return steps
-
-    def _admit(self, group, sched, tok, live, active, remaining, t0):
+    def _admit(self, group, sched, tok, live, active, remaining, last_emit,
+               t0):
         lens = [len(r.prompt) for r in group]
         bucket = self._bucket(max(lens))
         padded = any(n != bucket for n in lens)
-        nb = batch_bucket(len(group), self.max_prefill_batch)
-        tokens, lens_arr = pad_to_bucket([r.prompt for r in group], bucket, nb)
+        nb = _batch_bucket(len(group), self.max_prefill_batch)
+        tokens, lens_arr = _pad_to_bucket([r.prompt for r in group], bucket,
+                                          nb)
+        seeds = np.zeros((nb,), np.int32)
+        seeds[:len(group)] = [r.eviction_seed for r in group]
         fn = self.prefill_cache.get(bucket, nb, self.policy, padded)
         res = fn(self.params, self.lkv_params, jnp.asarray(tokens),
-                 jnp.asarray(lens_arr))
+                 jnp.asarray(lens_arr), jnp.asarray(seeds))
         res.logits.block_until_ready()
         now = time.perf_counter() - t0
         first = np.asarray(jnp.argmax(res.logits, -1).astype(jnp.int32))
@@ -343,6 +662,7 @@ class ContinuousEngine:
             r.out_tokens = [int(first[i])]
             r.first_token_s = now
             r.ttft_s = now - r.enqueue_s
+            last_emit[slot] = now
             if r.out_tokens[-1] == self.eos_id or r.max_new_tokens <= 1:
                 sched.retire(r, now=now)
                 active[slot] = False
@@ -350,19 +670,3 @@ class ContinuousEngine:
                 active[slot] = True
                 remaining[slot] = r.max_new_tokens - 1
         return tok, live
-
-    def _collect(self, toks, steps, sched, active, remaining, t0):
-        now = time.perf_counter() - t0
-        for slot in np.nonzero(active)[0]:
-            r = sched.running[slot]
-            take = min(steps, int(remaining[slot]))  # drop overshoot tokens
-            finished = False
-            for t in toks[slot, :take].tolist():
-                r.out_tokens.append(int(t))
-                if int(t) == self.eos_id:
-                    finished = True
-                    break
-            remaining[slot] -= steps
-            if finished or remaining[slot] <= 0:
-                sched.retire(r, now=now)
-                active[slot] = False

@@ -6,16 +6,22 @@ state machine
 
     QUEUED ──admit──> PREFILL ──place──> DECODE ──retire──> DONE
 
-``ContinuousEngine`` (engine.py) drives it: it asks for the next
-admissible prefill group (same-bucket requests, bounded by free slots),
-places each prefilled request into a freed slot, and retires requests as
-they hit EOS or their token budget — queued requests flow into freed
-slots mid-stream, so one long prompt no longer stalls a whole batch.
+``ContinuousEngine`` (engine.py) drives it with a *token-budget step*:
+each engine iteration spends ``token_budget`` tokens of work, split
+between one decode chunk for every live slot and as many prefill chunks
+of the in-flight prompt as the leftover budget covers (``plan_step``).
+Decode therefore advances every iteration — a 16k prompt streams through
+in chunk-sized slices between decode chunks instead of stalling every
+live slot for its whole forward pass.  ``next_request`` hands the engine
+the FCFS head once a slot is free; the deprecated ``BucketedEngine``
+still uses the group admission path (``next_prefill_group``).
 
-Timing is per-request (this is where the old engine's batch-level
+Timing is per-request (this is where the lockstep engine's batch-level
 ``ttft_s`` stamp is fixed): TTFT is measured from the moment a request
-becomes schedulable (its arrival) to its first emitted token, and TPOT is
-the mean inter-token time after the first.
+becomes schedulable (its arrival) to its first emitted token, TPOT is
+the mean inter-token time after the first, and ``max_gap_s`` records the
+worst stall between consecutive token emissions (the decode-stall metric
+in ``benchmarks/bench_serving.py``).
 """
 
 from __future__ import annotations
@@ -25,6 +31,32 @@ from enum import Enum
 from typing import Callable, Optional
 
 import numpy as np
+
+
+def plan_step(
+    *,
+    token_budget: int,
+    chunk: int,
+    n_active: int,
+    decode_steps: int,
+    prefill_pending: bool,
+) -> tuple[int, int]:
+    """Split one engine iteration's token budget between decode and prefill.
+
+    Decode is first-class: every live slot advances ``decode_steps`` tokens
+    each iteration.  The remaining budget buys prefill chunks for the
+    in-flight prompt — at least one whenever a prefill is pending (progress
+    guarantee), at most what the budget covers (decode-latency guarantee:
+    no live slot waits longer than one token-budget step between its decode
+    chunks).  Returns (decode_steps, prefill_chunks).
+    """
+    assert token_budget > 0 and chunk > 0
+    d = decode_steps if n_active > 0 else 0
+    room = max(token_budget - n_active * d, 0)
+    p = 0
+    if prefill_pending:
+        p = max(room // chunk, 1)
+    return d, p
 
 
 class RequestState(str, Enum):
@@ -42,6 +74,10 @@ class Request:
     out_tokens: list = field(default_factory=list)
     ttft_s: float = 0.0
     done: bool = False
+    # per-request randomness (the ``random`` eviction policy): rows are
+    # decorrelated via ``jax.random.fold_in`` — defaults to ``uid`` so two
+    # requests in one batch never share an eviction pattern
+    seed: Optional[int] = None
     # -- continuous-batching fields ------------------------------------
     arrival_s: float = 0.0  # trace-clock offset at which the request arrives
     state: RequestState = RequestState.QUEUED
@@ -50,6 +86,11 @@ class Request:
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
     tpot_s: float = 0.0  # mean seconds per output token after the first
+    max_gap_s: float = 0.0  # worst stall between consecutive token emissions
+
+    @property
+    def eviction_seed(self) -> int:
+        return self.uid if self.seed is None else self.seed
 
 
 class SlotScheduler:
@@ -99,7 +140,22 @@ class SlotScheduler:
     def has_work(self) -> bool:
         return bool(self._pending or self._queue or self.running)
 
+    def has_arrived(self, now: float) -> bool:
+        """True when a request is admissible right now (arrived, queued)."""
+        self.poll_arrivals(now)
+        return bool(self._queue)
+
     # -- admission / retirement ------------------------------------------
+    def next_request(self, now: float) -> Optional[Request]:
+        """FCFS head for chunked prefill (one in-flight prompt at a time),
+        or None when nothing has arrived or no slot is free to land in."""
+        self.poll_arrivals(now)
+        if not self._queue or not self._free:
+            return None
+        req = self._queue.pop(0)
+        req.state = RequestState.PREFILL
+        return req
+
     def next_prefill_group(self, now: float) -> Optional[list[Request]]:
         """The next same-bucket admission group, or None if nothing is
         admissible (no arrived requests, or no free slot)."""

@@ -1,13 +1,14 @@
-"""Continuous-batching serving: slot scheduler, bucketed prefill, and the
+"""Continuous-batching serving: slot scheduler, chunked prefill, and the
 slot-batched decode loop.
 
 The load-bearing property is *exactness*: a request served through the
-continuous engine — padded to its bucket, prefilled in a micro-batch,
-scattered into a previously used decode slot, and decoded in chunks next
-to unrelated neighbours — must produce the same tokens as serving it
-alone through the lockstep engine.  Post-eviction caches being
+continuous engine — streamed chunk by chunk with online score
+accumulation, scattered into a previously used decode slot, and decoded
+in chunks next to unrelated neighbours — must produce the same tokens as
+serving it alone through the lockstep engine.  Post-eviction caches being
 shape-uniform is what makes the machinery possible; these tests are what
-make it trustworthy.
+make it trustworthy.  The deprecated bucketed path keeps its own smoke
+coverage at the bottom.
 """
 
 import jax
@@ -20,13 +21,18 @@ from repro.configs import get_smoke_config
 from repro.core import policies
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import (ContinuousEngine, PrefillCompileCache, Request,
-                           ServingEngine, SlotScheduler, batch_bucket,
-                           bucket_for, pad_to_bucket)
+from repro.serving import (BucketedEngine, ContinuousEngine,
+                           PrefillCompileCache, Request, ServingEngine,
+                           SlotScheduler, batch_bucket, bucket_for,
+                           pad_to_bucket, plan_step)
 
 BUDGET = 8
 MAX_NEW = 6
 BUCKETS = (16, 32)
+CHUNK = 16
+
+# the bucketed path is deprecated-but-kept; its own tests stay authoritative
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 
 @pytest.fixture(scope="module")
@@ -44,8 +50,8 @@ def _requests(cfg, lens, seed=0, max_new=MAX_NEW):
         for i, n in enumerate(lens)]
 
 
-def _isolated(cfg, params, lkv, req):
-    eng = ServingEngine(params, cfg, policy="lookaheadkv",
+def _isolated(cfg, params, lkv, req, policy="lookaheadkv"):
+    eng = ServingEngine(params, cfg, policy=policy,
                         evict=EvictionConfig(budget=BUDGET), lkv_params=lkv,
                         max_new_tokens=req.max_new_tokens, eos_id=-1)
     iso = Request(uid=req.uid, prompt=req.prompt,
@@ -57,6 +63,32 @@ def _isolated(cfg, params, lkv, req):
 # ---------------------------------------------------------------------------
 # host-side scheduling (no model)
 # ---------------------------------------------------------------------------
+
+
+def test_plan_step_budget_split():
+    # decode is first-class: live slots always get their chunk; the rest of
+    # the budget buys prefill chunks (at least one when a prefill pends)
+    assert plan_step(token_budget=32, chunk=16, n_active=2, decode_steps=8,
+                     prefill_pending=True) == (8, 1)
+    assert plan_step(token_budget=48, chunk=16, n_active=0, decode_steps=8,
+                     prefill_pending=True) == (0, 3)
+    assert plan_step(token_budget=16, chunk=16, n_active=4, decode_steps=4,
+                     prefill_pending=True) == (4, 1)  # progress guarantee
+    assert plan_step(token_budget=32, chunk=16, n_active=2, decode_steps=8,
+                     prefill_pending=False) == (8, 0)
+
+
+def test_slot_scheduler_next_request_gated_by_free_slots():
+    sched = SlotScheduler(1, bucket_for=lambda n: CHUNK)
+    reqs = _requests(get_smoke_config("smollm-135m"), [8, 8], seed=1)
+    for r in reqs:
+        sched.submit(r)
+    head = sched.next_request(now=0.0)
+    assert head.uid == 0
+    sched.place(head)
+    assert sched.next_request(now=0.0) is None  # no free slot
+    sched.retire(head, now=1.0)
+    assert sched.next_request(now=1.0).uid == 1
 
 
 def test_slot_scheduler_bookkeeping():
@@ -179,8 +211,8 @@ def test_retired_slot_refill_matches_isolated(model):
     reqs = _requests(cfg, [12, 16, 26], seed=4)
     eng = ContinuousEngine(params, cfg, policy="lookaheadkv",
                            evict=EvictionConfig(budget=BUDGET),
-                           lkv_params=lkv, num_slots=1, buckets=BUCKETS,
-                           max_new_tokens=MAX_NEW, eos_id=-1)
+                           lkv_params=lkv, num_slots=1, chunk=CHUNK,
+                           max_context=32, max_new_tokens=MAX_NEW, eos_id=-1)
     done = eng.run(reqs)
     assert len(done) == 3 and all(r.done for r in done)
     assert all(r.slot == 0 for r in done)  # same slot, reused twice
@@ -193,37 +225,37 @@ def test_retired_slot_refill_matches_isolated(model):
 
 
 def test_mixed_length_slots_match_isolated(model):
-    """Two slots, mixed buckets and padded prompts decoding side by side."""
+    """Two slots, mixed prompt lengths (divisible and not by the chunk)
+    decoding side by side — one compiled chunk shape serves them all."""
     cfg, params, lkv = model
     reqs = _requests(cfg, [12, 26, 32, 9], seed=5)
     eng = ContinuousEngine(params, cfg, policy="lookaheadkv",
                            evict=EvictionConfig(budget=BUDGET),
-                           lkv_params=lkv, num_slots=2, buckets=BUCKETS,
-                           max_new_tokens=MAX_NEW, eos_id=-1)
+                           lkv_params=lkv, num_slots=2, chunk=CHUNK,
+                           max_context=48, max_new_tokens=MAX_NEW, eos_id=-1)
     done = eng.run(reqs)
     assert len(done) == 4
     for r in done:
         assert len(r.out_tokens) == MAX_NEW
         assert r.out_tokens == _isolated(cfg, params, lkv, r), r.uid
-    assert eng.prefill_cache.stats()["entries"] >= 2  # >1 bucket compiled
+    # one chunk-step program + one finalize program, regardless of the
+    # four distinct prompt lengths
+    assert eng.chunk_cache.stats()["entries"] == 2
 
 
-def test_position_policy_exact_under_padding(model):
-    """streaming_llm is attention-free; bucket padding must not perturb it."""
+def test_position_policy_exact_chunked(model):
+    """streaming_llm is attention-free; chunked streaming must not perturb
+    its position scores (or the decode tokens)."""
     cfg, params, _ = model
     reqs = _requests(cfg, [11, 16], seed=6)
     eng = ContinuousEngine(params, cfg, policy="streaming_llm",
                            evict=EvictionConfig(budget=BUDGET),
-                           num_slots=2, buckets=BUCKETS,
+                           num_slots=2, chunk=CHUNK, max_context=32,
                            max_new_tokens=MAX_NEW, eos_id=-1)
     done = eng.run(reqs)
     for r in done:
-        iso_eng = ServingEngine(params, cfg, policy="streaming_llm",
-                                evict=EvictionConfig(budget=BUDGET),
-                                max_new_tokens=MAX_NEW, eos_id=-1)
-        iso = Request(uid=r.uid, prompt=r.prompt, max_new_tokens=MAX_NEW)
-        iso_eng.serve([iso])
-        assert r.out_tokens == iso.out_tokens, r.uid
+        assert r.out_tokens == _isolated(cfg, params, None, r,
+                                         policy="streaming_llm"), r.uid
 
 
 def test_single_token_request_retires_at_admission(model):
@@ -231,11 +263,63 @@ def test_single_token_request_retires_at_admission(model):
     reqs = _requests(cfg, [12, 14], seed=7, max_new=1)
     eng = ContinuousEngine(params, cfg, policy="lookaheadkv",
                            evict=EvictionConfig(budget=BUDGET),
-                           lkv_params=lkv, num_slots=1, buckets=BUCKETS,
-                           max_new_tokens=MAX_NEW, eos_id=-1)
+                           lkv_params=lkv, num_slots=1, chunk=CHUNK,
+                           max_context=32, max_new_tokens=MAX_NEW, eos_id=-1)
     done = eng.run(reqs)
     assert [len(r.out_tokens) for r in done] == [1, 1]
     assert all(r.done and r.tpot_s == 0.0 for r in done)
+
+
+def test_random_policy_decorrelated_across_requests(model):
+    """The per-request fold_in seed: two different requests with identical
+    prompts must not evict the same 'random' positions (the old fixed
+    PRNGKey(seed) gave every request in every batch one shared pattern),
+    while the same request replayed stays deterministic."""
+    cfg, params, _ = model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    ev = EvictionConfig(budget=BUDGET)
+    toks = jnp.asarray(np.stack([prompt, prompt]))
+    res = policies.run_eviction("random", params, cfg, toks, evict=ev,
+                                seeds=jnp.asarray([0, 1], jnp.int32))
+    pos = np.asarray(res.cache["attn"]["pos"])
+    mask = np.asarray(res.cache["attn"]["mask"])
+    kept0 = set(pos[0, 0, mask[0, 0, :, 0], 0].tolist())
+    kept1 = set(pos[0, 1, mask[0, 1, :, 0], 0].tolist())
+    assert kept0 != kept1  # decorrelated rows
+    res2 = policies.run_eviction("random", params, cfg, toks, evict=ev,
+                                 seeds=jnp.asarray([0, 1], jnp.int32))
+    np.testing.assert_array_equal(pos, np.asarray(res2.cache["attn"]["pos"]))
+
+
+# ---------------------------------------------------------------------------
+# deprecated engines: importable, warn on construction, still serve
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_engines_warn_and_still_serve(model):
+    """Deprecate-but-keep: ServingEngine (lockstep) and BucketedEngine emit
+    a DeprecationWarning yet still produce the exact tokens the chunked
+    engine serves — the benchmark baseline contract."""
+    cfg, params, lkv = model
+    kw = dict(policy="lookaheadkv", evict=EvictionConfig(budget=BUDGET),
+              lkv_params=lkv, max_new_tokens=MAX_NEW, eos_id=-1)
+    with pytest.warns(DeprecationWarning):
+        lock = ServingEngine(params, cfg, **kw)
+    with pytest.warns(DeprecationWarning):
+        bucketed = BucketedEngine(params, cfg, num_slots=1, buckets=BUCKETS,
+                                  **kw)
+    with pytest.warns(DeprecationWarning):
+        bucket_for(12, BUCKETS)
+    reqs = _requests(cfg, [12], seed=8)
+    chunked = ContinuousEngine(params, cfg, num_slots=1, chunk=CHUNK,
+                               max_context=32, **kw)
+    got = chunked.run(reqs)[0].out_tokens
+    lock_req = _requests(cfg, [12], seed=8)
+    lock.serve(lock_req)
+    assert lock_req[0].out_tokens == got
+    bucket_req = _requests(cfg, [12], seed=8)
+    assert bucketed.run(bucket_req)[0].out_tokens == got
 
 
 def test_padded_prefill_parity(model):
