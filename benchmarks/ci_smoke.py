@@ -1,0 +1,75 @@
+"""CI benchmark smoke gate: run the kernel and serving benchmarks on tiny
+CPU configs, write a ``BENCH_ci.json`` artifact, and fail (exit 1) when any
+benchmark's own PASS/FAIL verdict fails.
+
+    PYTHONPATH=src python -m benchmarks.ci_smoke [--out BENCH_ci.json]
+
+Gated verdicts:
+
+* ``kernels/vmem_verdict``     — every Pallas tiling's analytic VMEM
+  working set (including the fused score kernel) fits v5e's ~16 MB;
+* ``serving/longtail_verdict`` — on the compact long-tail trace the
+  chunked engine compiles strictly fewer programs than the bucketed
+  baseline *and* cuts p95 TPOT.
+
+The JSON artifact carries every reported benchmark row plus the verdict
+map, so a red gate links straight to the number that moved.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+# every row name ending in ``_verdict`` gates the job
+SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ci.json")
+    args = ap.parse_args()
+
+    rows: list[dict] = []
+    verdicts: dict[str, str] = {}
+    errors: list[str] = []
+
+    def report(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        if name.endswith("_verdict"):
+            verdicts[name] = derived
+        print(f"{name},{'' if us is None else f'{us:.1f}'},{derived}",
+              flush=True)
+
+    for mod_name in SUITES:
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run(report)
+            report(f"{mod_name}/_suite_seconds", None,
+                   f"{time.time() - t0:.1f}")
+        except Exception as e:  # a crashed suite is a failed gate
+            import traceback
+
+            traceback.print_exc(file=sys.stderr)
+            errors.append(f"{mod_name}: {e!r}")
+
+    ok = bool(verdicts) and not errors and all(
+        v == "pass" for v in verdicts.values())
+    payload = {
+        "pass": ok,
+        "verdicts": verdicts,
+        "errors": errors,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nBENCH_ci: {'PASS' if ok else 'FAIL'} "
+          f"verdicts={verdicts} errors={errors} -> {args.out}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,15 +25,26 @@ like a monolithic pass:
 
 * **cumulative** (h2o): each chunk adds its queries' softmax column masses
   into a running per-key accumulator — a commutative sum, so the final
-  scores are chunk-split-invariant.
+  scores are chunk-split-invariant.  The per-chunk masses are a *fused
+  second output* of the streaming attention pass
+  (``ops.chunk_attention(..., score_masses=True)``): the kernel emits them
+  tile-by-tile inside its online-softmax recurrence, so no dense (C, K)
+  probability block ever materializes on the prefill hot path.
 * **observation-window** (snapkv, pyramidkv, tova): only the last
   ``window`` prompt queries matter (1 for tova), so the state is a rolling
   buffer of the newest ``window`` rotary-position-encoded queries; scoring
-  defers to the final chunk when the window is complete.
+  defers to the final chunk, where the masked streaming primitive
+  ``ops.lookahead_score`` (traced observation base, sliding-window mask)
+  scores them over the materialized buffer.
 * **final-observation** (lookaheadkv, gt_oracle): the observation rows are
   appended *after* the prompt (learned lookahead rows / the GT response),
   so nothing accumulates during prompt chunks — the observation pass runs
-  once at prompt end over the fully materialized key buffer.
+  once at prompt end over the fully materialized key buffer, through the
+  same streaming primitive.
+
+The dense (C, K) reference for all of this lives in
+``kernels/ref.py::chunk_column_masses`` (test oracle + small-shape direct
+path of the ops dispatch).
 """
 
 from __future__ import annotations
@@ -44,7 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kernels.ref import NEG_INF, _expand_gqa
+from repro.kernels.ref import NEG_INF
 
 # observation semantics per policy: how many trailing rows act as queries
 OBS_POLICIES = ("lookaheadkv", "snapkv", "tova", "h2o", "gt")
@@ -163,71 +174,28 @@ def init_score_state(
     return ScoreState()  # final-observation and position policies
 
 
-def chunk_column_masses(
-    q: jnp.ndarray,  # (B, C, H, hd) rotary-encoded chunk queries
-    k: jnp.ndarray,  # (B, K, KV, hd) key buffer; col j holds position j
-    *,
-    q_offset: jnp.ndarray,  # scalar int32 — absolute position of q row 0
-    window=None,
-    row_valid: Optional[jnp.ndarray] = None,  # (B, C) real-row mask
-) -> jnp.ndarray:
-    """Summed softmax column masses of the chunk's queries: (B, H, K) f32.
-
-    The per-row softmax is the same computation as ``ref.lookahead_score``
-    (causal on absolute positions, NEG_INF masking, f32) — buffer columns a
-    row cannot see contribute *exact zeros*, so streaming accumulation over
-    chunks reproduces the monolithic scores up to summation order (bitwise
-    for single-chunk policies).  Rows beyond the true prompt length are
-    zeroed via ``row_valid`` before the sum.
-
-    Note: this materializes the (B, H, C, K) probability block densely —
-    ~C·K f32 per (batch, head).  Fine for observation-sized C and the CPU
-    suite; for TPU-scale cumulative (h2o) scoring over very deep buffers,
-    the right routing is ``ops.lookahead_score``'s streaming/Pallas
-    machinery (sum = mean · n_rows), which first needs a row-validity mask
-    there — tracked in ROADMAP.md.  Dense is kept for now because blocked
-    summation would reassociate the row sum and give up the bit-exact
-    parity with monolithic prefill that the test suite pins.
-    """
-    B, C, H, hd = q.shape
-    K, KV = k.shape[1], k.shape[2]
-    kf = _expand_gqa(k, H // KV)
-    logits = jnp.einsum(
-        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)
-    ) / jnp.sqrt(hd).astype(jnp.float32)
-    q_pos = q_offset + jnp.arange(C)
-    k_pos = jnp.arange(K)
-    ok = k_pos[None, :] <= q_pos[:, None]  # (C, K)
-    if window is not None:
-        ok &= (q_pos[:, None] - k_pos[None, :]) < window
-    logits = jnp.where(ok[None, None], logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1)  # (B, H, C, K)
-    if row_valid is not None:
-        probs = probs * row_valid[:, None, :, None].astype(jnp.float32)
-    return probs.sum(axis=2)
-
-
 def update_layer_scores(
     policy: str,
     acc_l: Optional[jnp.ndarray],   # (B, H, K) this layer's accumulator
     qbuf_l: Optional[jnp.ndarray],  # (B, W, H, hd) this layer's query window
     q_rot: jnp.ndarray,  # (B, C, H, hd) the chunk's rotary-encoded queries
-    k_buf: jnp.ndarray,  # (B, K, KV, hd) keys incl. this chunk
     *,
+    masses_l: Optional[jnp.ndarray] = None,  # (B, H, K) fused kernel partials
     q_offset: jnp.ndarray,  # scalar int32 chunk start
     n_total: jnp.ndarray,  # scalar int32 true prompt length
-    window=None,
 ) -> tuple[Optional[jnp.ndarray], Optional[jnp.ndarray]]:
-    """One chunk's streaming update for one layer; returns (acc', qbuf')."""
+    """One chunk's streaming update for one layer; returns (acc', qbuf').
+
+    Cumulative (h2o) policies consume ``masses_l`` — the summed softmax
+    column masses of the chunk's valid rows, emitted by the attention
+    kernel itself (``ops.chunk_attention(..., score_masses=True)``) — so
+    the update is a plain accumulator add; no score matrix is recomputed
+    or materialized here."""
     C = q_rot.shape[1]
     if policy in STREAMING_CUMULATIVE:
-        row_valid = (q_offset + jnp.arange(C))[None] < n_total
-        row_valid = jnp.broadcast_to(row_valid, (q_rot.shape[0], C))
-        acc_l = acc_l + chunk_column_masses(
-            q_rot, k_buf, q_offset=q_offset, window=window,
-            row_valid=row_valid,
-        )
-        return acc_l, qbuf_l
+        assert masses_l is not None, \
+            f"{policy} needs the attention kernel's fused mass output"
+        return acc_l + masses_l, qbuf_l
     if policy in STREAMING_WINDOW:
         # roll the newest W *valid* rows in: global rows [total-W, total)
         # where total = min(n_total, chunk end).  Early chunks shorter than
@@ -270,9 +238,12 @@ def finalize_layer_scores(
     elif policy in STREAMING_WINDOW:
         W = stream_window(policy, window_size)
         boundary = n_total - W
-        s_qh = chunk_column_masses(
-            qbuf_l, k_buf, q_offset=boundary, window=window,
-        ) / jnp.float32(W)
+        # the masked streaming primitive scores the rolled window queries
+        # over the whole buffer (traced observation base ``boundary``);
+        # mean over the W rows == the monolithic sum / W
+        s_qh = ops.lookahead_score(
+            qbuf_l, k_buf, K, q_offset=boundary, window=window,
+        )
     else:  # final-observation policies
         assert obs_masses_l is not None, f"{policy} needs an observation pass"
         s_qh = obs_masses_l

@@ -15,6 +15,17 @@ hits HBM, and output traffic is Sk floats per head instead of n_obs·Sk.
 
 grid = (B, H, 2·nk); phase = ik // nk.
 
+This is the one masked streaming scoring primitive every observation-style
+policy rides (chunked *and* monolithic prefill):
+
+* ``q_offset`` is a *scalar-prefetched* (traced) observation-row base
+  position, so one compiled program serves the deferred observation-window
+  scoring of the snapkv family at any (traced) prompt length;
+* ``window`` applies the sliding-window visibility of local layers;
+* ``row_valid`` zeroes invalid observation rows (bucket padding) — they
+  contribute exact zeros to the mean, whose denominator stays ``n_obs``
+  (callers wanting a sum over valid rows rescale by ``n_obs``).
+
 Oracle: ``ref.lookahead_score``.  jnp fallback: ``ops._chunked_lookahead_score``.
 """
 
@@ -30,11 +41,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, mask_ref, o_ref, m_scr, l_scr, *,
-            n_prompt, n_obs, block_k, nk, scale):
+def _kernel(offs_ref, q_ref, k_ref, mask_ref, rv_ref, o_ref, m_scr, l_scr, *,
+            n_obs, block_k, nk, scale, window):
     j = pl.program_id(2)
     ik = jnp.where(j < nk, j, j - nk)
     phase1 = j >= nk
+    q0 = offs_ref[0]  # absolute position of obs row 0 (traced)
 
     @pl.when(j == 0)
     def _init():
@@ -47,9 +59,11 @@ def _kernel(q_ref, k_ref, mask_ref, o_ref, m_scr, l_scr, *,
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale  # (n_obs, block_k)
 
-    q_pos = n_prompt + jax.lax.broadcasted_iota(jnp.int32, (n_obs, block_k), 0)
+    q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (n_obs, block_k), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (n_obs, block_k), 1)
     ok = k_pos <= q_pos  # causal among obs rows; prompt keys all visible
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
     ok &= mask_ref[0, :][None, :]  # key validity (padding / evicted)
     s = jnp.where(ok, s, NEG_INF)
 
@@ -66,7 +80,8 @@ def _kernel(q_ref, k_ref, mask_ref, o_ref, m_scr, l_scr, *,
         m = m_scr[...]
         l = jnp.maximum(l_scr[...], 1e-30)
         p = jnp.where(ok, jnp.exp(s - m[:, None]), 0.0) / l[:, None]
-        o_ref[0, 0, :] = p.mean(axis=0).astype(o_ref.dtype)
+        p = p * rv_ref[0, :][:, None].astype(jnp.float32)
+        o_ref[0, 0, :] = (p.sum(axis=0) / n_obs).astype(o_ref.dtype)
 
 
 def lookahead_score_pallas(
@@ -75,6 +90,9 @@ def lookahead_score_pallas(
     n_prompt: int,
     *,
     kv_mask: jnp.ndarray | None = None,  # (B, n_prompt)
+    window: int | None = None,
+    q_offset=None,  # scalar int32 (may be traced); default n_prompt
+    row_valid: jnp.ndarray | None = None,  # (B, n_obs) real-row mask
     block_k: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
@@ -82,6 +100,8 @@ def lookahead_score_pallas(
     Sk, KV = k.shape[1], k.shape[2]
     group = H // KV
     scale = 1.0 / (hd ** 0.5)
+    if window == 0:
+        window = None
 
     block_k = min(block_k, Sk)
     pad = (-Sk) % block_k
@@ -92,41 +112,51 @@ def lookahead_score_pallas(
         full_mask = full_mask.at[:, :n_prompt].set(kv_mask)
     if pad:
         full_mask = jnp.pad(full_mask, ((0, 0), (0, pad)))
+    if row_valid is None:
+        row_valid = jnp.ones((B, n_obs), bool)
     Skp = Sk + pad
     nk = Skp // block_k
+    offs = jnp.reshape(
+        jnp.asarray(n_prompt if q_offset is None else q_offset, jnp.int32),
+        (1,))
 
     kernel = functools.partial(
-        _kernel, n_prompt=n_prompt, n_obs=n_obs, block_k=block_k, nk=nk,
-        scale=scale,
+        _kernel, n_obs=n_obs, block_k=block_k, nk=nk, scale=scale,
+        window=window,
     )
-    scores = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B, H, 2 * nk),
         in_specs=[
-            pl.BlockSpec((1, n_obs, 1, hd), lambda b, h, j: (b, 0, h, 0)),
+            pl.BlockSpec((1, n_obs, 1, hd), lambda b, h, j, offs: (b, 0, h, 0)),
             pl.BlockSpec(
                 (1, block_k, 1, hd),
-                lambda b, h, j, g=group, nk=nk: (
+                lambda b, h, j, offs, g=group, nk=nk: (
                     b, jnp.where(j < nk, j, j - nk), h // g, 0
                 ),
             ),
             pl.BlockSpec(
                 (1, block_k),
-                lambda b, h, j, nk=nk: (b, jnp.where(j < nk, j, j - nk)),
+                lambda b, h, j, offs, nk=nk: (b, jnp.where(j < nk, j, j - nk)),
             ),
+            pl.BlockSpec((1, n_obs), lambda b, h, j, offs: (b, 0)),
         ],
         # phase-0 iterations park on block 0 (never written by the kernel in
         # that phase; phase 1's first iteration overwrites it before any
         # write-back escapes), phase-1 iterations emit block ik.
         out_specs=pl.BlockSpec(
             (1, 1, block_k),
-            lambda b, h, j, nk=nk: (b, h, jnp.where(j < nk, 0, j - nk)),
+            lambda b, h, j, offs, nk=nk: (b, h, jnp.where(j < nk, 0, j - nk)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B, H, Skp), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((n_obs,), jnp.float32),
             pltpu.VMEM((n_obs,), jnp.float32),
         ],
+    )
+    scores = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Skp), jnp.float32),
         interpret=interpret,
-    )(q_obs, k, full_mask)
+    )(offs, q_obs, k, full_mask, row_valid)
     return scores[..., :n_prompt]

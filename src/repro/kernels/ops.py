@@ -169,9 +169,11 @@ def chunk_attention(
     *,
     q_offset,  # scalar int32 (usually traced) — position of q row 0
     window=None,  # None | python int | traced int32 scalar
+    score_masses: bool = False,  # also emit summed softmax column masses
+    n_total=None,  # scalar int32 — rows at/past it contribute zero mass
     block_q: int = 256,
     block_k: int = 1024,
-) -> jnp.ndarray:
+):
     """Attention of one prefill chunk over the prompt-so-far buffer.
 
     Prior keys (columns < ``q_offset``) are fully visible, the chunk is
@@ -179,6 +181,16 @@ def chunk_attention(
     causally invisible — so the buffer may be deeper than the tokens
     streamed so far without any explicit validity mask.  ``q_offset`` is
     traced: one compiled program serves every chunk position.
+
+    With ``score_masses=True`` the return value is ``(out, masses)`` where
+    ``masses[b, h, j] = Σ_i softmax_row_i[j]`` over the chunk's *valid*
+    rows (``q_offset + i < n_total``; all rows when ``n_total`` is None) —
+    the cumulative (h2o) eviction-score partial, fused into the streaming
+    pass so the (C, K) probability block never materializes on the Pallas
+    or large-buffer paths.  The small-buffer jnp path scores through the
+    dense ``ref.chunk_column_masses`` oracle (chunking only adds overhead
+    there, and the dense sum preserves bit-exact chunked-vs-monolithic
+    eviction parity on CPU).
     """
     B, C, H, hd = q.shape
     K = k.shape[1]
@@ -186,20 +198,43 @@ def chunk_attention(
     if use_pallas() and static_window:
         from repro.kernels import chunk_attention as ck
 
+        if score_masses:
+            nt = q_offset + C if n_total is None else n_total
+            return ck.chunk_attention_masses_pallas(
+                q, k, v, q_offset, nt, window=window,
+                block_k=min(block_k, K), interpret=_pallas_interpret(),
+            )
         return ck.chunk_attention_pallas(
             q, k, v, q_offset, window=window, block_k=min(block_k, K),
             interpret=_pallas_interpret(),
         )
+    row_valid = None
+    if score_masses and n_total is not None:
+        row_valid = jnp.broadcast_to(
+            (jnp.asarray(q_offset, jnp.int32) + jnp.arange(C))[None]
+            < n_total, (B, C))
     if K <= _DIRECT_SEQ:
         from repro.kernels import ref
 
         q_pos = jnp.broadcast_to(
             jnp.asarray(q_offset, jnp.int32) + jnp.arange(C), (B, C))
-        return ref.attention(q, k, v, causal=True, window=window, q_pos=q_pos)
-    return _chunked_attention(
+        out = ref.attention(q, k, v, causal=True, window=window, q_pos=q_pos)
+        if score_masses:
+            masses = ref.chunk_column_masses(
+                q, k, q_offset=q_offset, window=window, row_valid=row_valid)
+            return out, masses
+        return out
+    out = _chunked_attention(
         q, k, v, causal=True, window=window, q_offset=q_offset,
         kv_mask=None, block_q=block_q, block_k=block_k,
     )
+    if score_masses:
+        masses = _chunked_lookahead_score(
+            q, k, K, kv_mask=None, window=window, q_offset=q_offset,
+            row_valid=row_valid, reduce="sum", block_k=block_k,
+        )
+        return out, masses
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -287,8 +322,9 @@ def lookahead_score(
     n_prompt: int,
     *,
     kv_mask: jnp.ndarray | None = None,
-    window=None,
-    q_offset: int | None = None,
+    window=None,  # None | python int | traced int32 scalar
+    q_offset=None,  # None | python int | traced int32 scalar
+    row_valid: jnp.ndarray | None = None,  # (B, n_obs) real-row mask
     block_k: int = 2048,
 ) -> jnp.ndarray:
     """Per-q-head importance scores of prompt keys: (B, H, n_prompt), f32.
@@ -297,29 +333,44 @@ def lookahead_score(
     and normalizer, pass 2 accumulates normalized probability mass per prompt
     key.  The (n_obs × Sk) score matrix is never materialized in full — only
     (n_obs × block_k) tiles.
+
+    The one masked streaming scoring primitive shared by monolithic and
+    chunked prefill: ``q_offset`` may be a *traced* scalar (the Pallas
+    kernel prefetches it, so one compiled program serves the deferred
+    observation-window scoring at any prompt length), ``window`` restricts
+    local layers (static int on the Pallas path; a traced window falls back
+    to jnp), and ``row_valid`` zeroes invalid observation rows — they
+    contribute exact zeros to the mean, whose denominator stays ``n_obs``.
     """
     B, n_obs, H, hd = q_obs.shape
     Sk = k.shape[1]
-    if use_pallas() and window is None and q_offset is None:
+    static_window = window is None or isinstance(window, int)
+    if use_pallas() and static_window:
         from repro.kernels import lookahead_score as lk
 
         return lk.lookahead_score_pallas(
-            q_obs, k, n_prompt, kv_mask=kv_mask,
+            q_obs, k, n_prompt, kv_mask=kv_mask, window=window,
+            q_offset=q_offset, row_valid=row_valid,
             block_k=min(block_k, Sk), interpret=_pallas_interpret(),
         )
     if Sk <= _DIRECT_SEQ:
         from repro.kernels import ref
 
         return ref.lookahead_score(q_obs, k, n_prompt, kv_mask=kv_mask,
-                                   window=window, q_offset=q_offset)
+                                   window=window, q_offset=q_offset,
+                                   row_valid=row_valid)
     return _chunked_lookahead_score(
         q_obs, k, n_prompt, kv_mask=kv_mask, window=window,
-        q_offset=q_offset, block_k=block_k,
+        q_offset=q_offset, row_valid=row_valid, block_k=block_k,
     )
 
 
 def _chunked_lookahead_score(q_obs, k, n_prompt, *, kv_mask, window, q_offset,
-                             block_k):
+                             block_k, row_valid=None, reduce="mean"):
+    """Streaming jnp scoring fallback.  ``reduce='mean'`` divides the summed
+    per-key mass by n_obs (``lookahead_score`` semantics); ``'sum'`` leaves
+    the raw sum over valid rows (``chunk_attention``'s fused-mass
+    semantics)."""
     B, n_obs, H, hd = q_obs.shape
     Sk, KV = k.shape[1], k.shape[2]
     group = H // KV
@@ -360,13 +411,19 @@ def _chunked_lookahead_score(q_obs, k, n_prompt, *, kv_mask, window, q_offset,
             jnp.zeros((B, H, n_obs), jnp.float32))
     (m, l), _ = jax.lax.scan(p1, init, (jnp.arange(nk), kf, fm))
     l = jnp.maximum(l, 1e-30)
+    rv = None
+    if row_valid is not None:
+        rv = row_valid[:, None, :, None].astype(jnp.float32)  # (B,1,n_obs,1)
 
-    # pass 2: per-key normalized mass, mean over obs rows
+    # pass 2: per-key normalized mass, reduced over obs rows
     def p2(_, inputs):
         ik, kb, mb = inputs
         s = tile_logits(ik, kb, mb)
         p = jnp.exp(s - m[..., None]) / l[..., None]
-        return None, p.mean(axis=2)  # (B, H, block_k)
+        if rv is not None:
+            p = p * rv
+        red = p.mean(axis=2) if reduce == "mean" else p.sum(axis=2)
+        return None, red  # (B, H, block_k)
 
     _, tiles = jax.lax.scan(p2, None, (jnp.arange(nk), kf, fm))
     scores = jnp.moveaxis(tiles, 0, 2).reshape(B, H, nk * block_k)

@@ -110,6 +110,7 @@ def lookahead_score(
     kv_mask: jnp.ndarray | None = None,  # (B, n_prompt) prompt-key validity
     window=None,  # sliding-window span for local layers (None = full)
     q_offset: int | None = None,  # absolute position of obs row 0 (default n_prompt)
+    row_valid: jnp.ndarray | None = None,  # (B, n_obs) real-row mask
 ) -> jnp.ndarray:
     """Ground-truth importance scores (paper eq. (1)/(3)).
 
@@ -118,6 +119,11 @@ def lookahead_score(
     includes the obs-to-obs mass (Algorithm 2 slices A[n_in:, :n_in] *after*
     the softmax).  Returns per-q-head scores, mean over obs rows:
     (B, H, n_prompt), f32.
+
+    ``row_valid`` marks real observation rows: invalid (padded / beyond the
+    true prompt length) rows contribute exact zeros to the mean, whose
+    denominator stays ``n_obs`` — callers that want a sum over valid rows
+    rescale by ``n_obs``.
     """
     B, n_obs, H, hd = q_obs.shape
     Sk = k.shape[1]
@@ -141,8 +147,49 @@ def lookahead_score(
         ok &= full_mask[:, None, :]
     logits = jnp.where(ok[:, None, :, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)  # (B, H, n_obs, Sk)
+    if row_valid is not None:
+        probs = probs * row_valid[:, None, :, None].astype(jnp.float32)
     scores = probs[..., :n_prompt].mean(axis=2)  # (B, H, n_prompt)
     return scores
+
+
+def chunk_column_masses(
+    q: jnp.ndarray,  # (B, C, H, hd) rotary-encoded chunk queries
+    k: jnp.ndarray,  # (B, K, KV, hd) key buffer; col j holds position j
+    *,
+    q_offset,  # scalar int32 (may be traced) — absolute position of q row 0
+    window=None,
+    row_valid: jnp.ndarray | None = None,  # (B, C) real-row mask
+) -> jnp.ndarray:
+    """Summed softmax column masses of the chunk's queries: (B, H, K) f32.
+
+    The dense oracle for the fused score output of
+    ``chunk_attention.chunk_attention_masses_pallas`` and the streaming jnp
+    fallback in ``ops.chunk_attention`` — it materializes the full
+    (B, H, C, K) probability block, so it is test-/small-shape-only.  The
+    per-row softmax is the same computation as ``lookahead_score`` (causal
+    on absolute positions, NEG_INF masking, f32) — buffer columns a row
+    cannot see contribute *exact zeros*, so streaming accumulation over
+    chunks reproduces the monolithic scores up to summation order.  Rows
+    beyond the true prompt length are zeroed via ``row_valid`` before the
+    sum.
+    """
+    B, C, H, hd = q.shape
+    K, KV = k.shape[1], k.shape[2]
+    kf = _expand_gqa(k, H // KV)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(C)
+    k_pos = jnp.arange(K)
+    ok = k_pos[None, :] <= q_pos[:, None]  # (C, K)
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    logits = jnp.where(ok[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, H, C, K)
+    if row_valid is not None:
+        probs = probs * row_valid[:, None, :, None].astype(jnp.float32)
+    return probs.sum(axis=2)
 
 
 def ssd_scan(

@@ -131,15 +131,22 @@ def chunk_prefill_attention(
     *,
     q_offset,  # scalar int32 (traced) — absolute position of chunk row 0
     is_global: jnp.ndarray | bool = True,
+    score_masses: bool = False,  # fused eviction-score partials (h2o)
+    n_total=None,  # scalar int32 — true prompt length (masks pad rows)
     lora: Optional[dict] = None,
     lora_scale: float = 1.0,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray,
+           Optional[jnp.ndarray]]:
     """Streaming-prefill attention: project + rotate the chunk, append its
     K/V into the prompt buffer at ``q_offset``, and attend the chunk's
     queries over prior-chunk keys plus causal self-attention within the
-    chunk (``ops.chunk_attention``).  Returns (out, q, k_buf', v_buf') —
-    the rotary-encoded q feeds the streaming eviction scores, the updated
-    buffers carry the materialized KV to the next chunk.
+    chunk (``ops.chunk_attention``).  Returns (out, q, k_buf', v_buf',
+    masses) — the rotary-encoded q feeds the streaming eviction scores, the
+    updated buffers carry the materialized KV to the next chunk, and
+    ``masses`` is the fused per-key column-mass partial (B, H, K) when
+    ``score_masses`` is set (None otherwise): the cumulative (h2o) policy's
+    chunk contribution, emitted by the attention kernel itself with rows at
+    or past ``n_total`` masked to zero.
 
     The buffer must be deep enough for the write (``q_offset + C <= K``);
     ``jax.lax.dynamic_update_slice`` would otherwise silently clamp the
@@ -151,13 +158,19 @@ def chunk_prefill_attention(
     v_buf = jax.lax.dynamic_update_slice(
         v_buf, v.astype(v_buf.dtype), (0, q_offset, 0, 0))
     window = layer_window(a, is_global)
-    out = ops.chunk_attention(q, k_buf, v_buf, q_offset=q_offset,
-                              window=window)
+    masses = None
+    if score_masses:
+        out, masses = ops.chunk_attention(
+            q, k_buf, v_buf, q_offset=q_offset, window=window,
+            score_masses=True, n_total=n_total)
+    else:
+        out = ops.chunk_attention(q, k_buf, v_buf, q_offset=q_offset,
+                                  window=window)
     B, C = h.shape[:2]
     out = out.reshape(B, C, a.q_dim)
     out = linear(out, p["wo"], lora=_lora_for(lora, "wo"),
                  lora_mask=inp.lookahead_mask, lora_scale=lora_scale)
-    return out, q, k_buf, v_buf
+    return out, q, k_buf, v_buf, masses
 
 
 _HUGE_WINDOW = 1 << 30

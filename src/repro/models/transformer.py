@@ -36,6 +36,7 @@ import numpy as np
 from repro.common.config import EvictionConfig, ModelConfig
 from repro.core import eviction as ev
 from repro.core import scoring
+from repro.kernels import ops
 from repro.core.lookahead import append_lookahead, lora_scale
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
@@ -526,9 +527,13 @@ def prefill(
 #     *traced* chunk offset, so one compiled program serves every chunk of
 #     every prompt length);
 #   * a per-policy ``ScoreState`` (core/scoring.py) accumulates eviction
-#     scores online — h2o sums column masses chunk by chunk, the
-#     snapkv/pyramidkv/tova family rolls the newest observation-window
-#     queries, and lookaheadkv/gt_oracle defer to a final observation pass;
+#     scores online — h2o sums per-key column masses chunk by chunk, taking
+#     them directly from the attention kernel's *fused* second output
+#     (``ops.chunk_attention(..., score_masses=True)``; no dense (C, K)
+#     probability block on the hot path), the snapkv/pyramidkv/tova family
+#     rolls the newest observation-window queries, and lookaheadkv/
+#     gt_oracle defer to a final observation pass — both scored at prompt
+#     end through the masked streaming ``ops.lookahead_score`` primitive;
 #   * ``prefill_finalize`` runs the *same* ``evict_layer`` once at prompt
 #     end, so the evicted cache matches monolithic prefill exactly (same
 #     kept (layer, head, position) sets; logits bitwise on the reference
@@ -640,20 +645,24 @@ def prefill_chunk(
     if state.score.qbuf is not None:
         xs["qbuf"] = state.score.qbuf
 
+    # cumulative policies take their per-chunk column-mass partials straight
+    # from the attention kernel's fused second output — no dense score block
+    want_masses = policy in scoring.STREAMING_CUMULATIVE
+
     def body(h, x):
         lp = x["p"]
         flag = x.get("flag", True)
         u = rms_norm(h, lp["ln1"], cfg.norm_eps)
-        out, q, k_buf, v_buf = attn_mod.chunk_prefill_attention(
+        out, q, k_buf, v_buf, masses = attn_mod.chunk_prefill_attention(
             lp["attn"], a, u, inp, x["k"], x["v"], q_offset=s,
-            is_global=flag,
+            is_global=flag, score_masses=want_masses, n_total=n_total,
         )
         h = h + out
         h, _ = _ffn_residual(h, lp, cfg)
         ys: dict = {"k": k_buf, "v": v_buf}
         acc_l, qbuf_l = scoring.update_layer_scores(
-            policy, x.get("acc"), x.get("qbuf"), q, k_buf, q_offset=s,
-            n_total=n_total, window=layer_window(a, flag),
+            policy, x.get("acc"), x.get("qbuf"), q, masses_l=masses,
+            q_offset=s, n_total=n_total,
         )
         if acc_l is not None:
             ys["acc"] = acc_l
@@ -720,12 +729,14 @@ def _chunk_observation_pass(
     if flags is not None:
         xs["flag"] = jnp.asarray(flags)
 
+    K = state.k.shape[2]
+
     def body(h, x):
         lp = x["p"]
         lora_l = x.get("lora")
         flag = x.get("flag", True)
         u = rms_norm(h, lp["ln1"], cfg.norm_eps)
-        out, q, k_buf, v_buf = attn_mod.chunk_prefill_attention(
+        out, q, k_buf, v_buf, _ = attn_mod.chunk_prefill_attention(
             lp["attn"], a, u, inp, x["k"], x["v"], q_offset=n_total,
             is_global=flag,
             lora=None if lora_l is None else lora_l.get("attn"),
@@ -734,9 +745,11 @@ def _chunk_observation_pass(
         h = h + out
         h, _ = _ffn_residual(h, lp, cfg, lora_l=lora_l, lora_mask=lmask,
                              ls=ls)
-        masses = scoring.chunk_column_masses(
-            q, k_buf, q_offset=n_total, window=layer_window(a, flag),
-        ) / jnp.float32(n_obs)
+        # the masked streaming primitive scores the observation rows over
+        # the whole buffer (mean over the n_obs rows, traced row base)
+        masses = ops.lookahead_score(
+            q, k_buf, K, q_offset=n_total, window=layer_window(a, flag),
+        )
         return h, {"k": k_buf, "v": v_buf, "obs": masses}
 
     _, ys = jax.lax.scan(body, h, xs)

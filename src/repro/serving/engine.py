@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.common.config import EvictionConfig, ModelConfig
 from repro.core import policies
+from repro.kernels import ops
 from repro.models import transformer as tf
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     PrefillCompileCache, _batch_bucket,
@@ -241,7 +242,13 @@ class ContinuousEngine(_SlotDecodeMixin):
     traffic shape.  Streaming ``ScoreState`` accumulation makes the final
     eviction identical to monolithic prefill (see tests/test_chunked_
     prefill.py), so serving tokens still match the isolated lockstep
-    engine bit-for-bit.
+    engine bit-for-bit.  Eviction scores ride the attention kernels
+    themselves: cumulative (h2o) prefill takes its per-chunk column-mass
+    partials from ``ops.chunk_attention``'s fused second output, and the
+    finalize program scores observation windows through the masked
+    streaming ``ops.lookahead_score`` primitive — no dense (chunk × buffer)
+    probability block exists anywhere in the serving hot path
+    (``stats["score_path"]`` records which backend provided the partials).
 
     The decode loop is unchanged from the bucketed engine: jitted chunks of
     1/2/4/… steps with per-slot cursors and an active mask; a slot that
@@ -382,8 +389,15 @@ class ContinuousEngine(_SlotDecodeMixin):
         remaining = np.zeros(self.num_slots, np.int64)
         last_emit = np.zeros(self.num_slots, np.float64)
         pf: Optional[_InflightPrefill] = None
+        # fused Pallas scoring requires a *static* per-layer window —
+        # patterned local:global archs trace the window inside the layer
+        # scan, which routes ops.chunk_attention to the jnp fallback
+        static_window = tf.is_global_flags(self.cfg) is None
         self.stats = {"prefill_chunks": 0, "decode_chunks": 0,
-                      "max_prefill_between_decode": 0}
+                      "max_prefill_between_decode": 0,
+                      "score_path": ("pallas-fused"
+                                     if ops.use_pallas() and static_window
+                                     else "jnp-fallback")}
         since_decode = 0
 
         while sched.has_work() or pf is not None:

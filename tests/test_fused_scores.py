@@ -1,0 +1,210 @@
+"""Fused streaming score accumulation: the attention kernels emit the
+eviction-score partials themselves.
+
+Three layers of coverage:
+
+* kernel level — ``chunk_attention_masses_pallas`` (interpret mode) against
+  the dense ``ref.chunk_column_masses`` oracle across masked (padded) rows,
+  non-divisible prompt lengths and chunk sizes {128, 256}, with the fused
+  attention output bit-equal to the unfused kernel;
+* dispatch level — ``ops.chunk_attention(score_masses=True)`` and the
+  ``ops.lookahead_score`` row-validity / traced-offset / window extensions
+  on both the jnp fallback and the ``REPRO_FORCE_PALLAS=1`` interpret path,
+  including the large-buffer streaming jnp fallback;
+* pipeline level — kept sets stay bit-equal chunked-vs-monolithic for every
+  single-pass policy now that scores ride the fused kernel outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import EvictionConfig
+from repro.configs import get_smoke_config
+from repro.core import policies
+from repro.core.lookahead import init_lookahead_params
+from repro.kernels import ops, ref
+from repro.kernels.chunk_attention import (chunk_attention_masses_pallas,
+                                           chunk_attention_pallas)
+from repro.kernels.lookahead_score import lookahead_score_pallas
+from repro.models import transformer as tf
+
+
+def _case(B=2, C=32, K=96, H=6, KV=2, hd=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, C, H, hd))
+    k = jax.random.normal(ks[1], (B, K, KV, hd))
+    v = jax.random.normal(ks[2], (B, K, KV, hd))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [128, 256])
+@pytest.mark.parametrize("off,n_total", [
+    (0, 300),     # first chunk, everything valid
+    (256, 300),   # partial final chunk: rows past 300 are masked
+    (128, 140),   # nearly empty chunk: 12 valid rows
+])
+def test_fused_masses_match_dense_oracle(C, off, n_total):
+    """Masses across chunk sizes {128, 256}, non-divisible prompt lengths
+    and masked pad rows; the attention output is bit-equal to the unfused
+    kernel (phase 0 is the identical recurrence)."""
+    q, k, v = _case(B=1, C=C, K=384, H=4, KV=2, hd=16, seed=C + off)
+    offs = jnp.asarray(off, jnp.int32)
+    nt = jnp.asarray(n_total, jnp.int32)
+    out, masses = chunk_attention_masses_pallas(q, k, v, offs, nt,
+                                                block_k=64, interpret=True)
+    plain = chunk_attention_pallas(q, k, v, offs, block_k=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+    rv = jnp.broadcast_to((off + jnp.arange(C))[None] < nt, (1, C))
+    want = ref.chunk_column_masses(q, k, q_offset=offs, row_valid=rv)
+    np.testing.assert_allclose(np.asarray(masses), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+    # pad rows contribute exactly nothing: columns only they could see are 0
+    n_vis = min(off + C, n_total)
+    assert np.all(np.asarray(masses)[..., n_vis:] == 0.0)
+
+
+def test_fused_masses_windowed_and_traced():
+    """Sliding-window masses under a traced offset (the serving path jits
+    the chunk program with the offset as an argument)."""
+    q, k, v = _case(seed=7)
+    fn = jax.jit(lambda q, k, v, o, n: chunk_attention_masses_pallas(
+        q, k, v, o, n, window=24, block_k=32, interpret=True))
+    off, nt = jnp.asarray(40, jnp.int32), jnp.asarray(60, jnp.int32)
+    _, masses = fn(q, k, v, off, nt)
+    rv = jnp.broadcast_to((40 + jnp.arange(32))[None] < 60, (2, 32))
+    want = ref.chunk_column_masses(q, k, q_offset=40, window=24, row_valid=rv)
+    np.testing.assert_allclose(np.asarray(masses), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# dispatch level (ops)
+# ---------------------------------------------------------------------------
+
+
+def test_ops_chunk_attention_masses_jnp_and_pallas(monkeypatch):
+    """The public wrapper returns the same (out, masses) on the jnp
+    fallback and the forced-Pallas interpret path."""
+    q, k, v = _case(seed=3)
+    off, nt = jnp.asarray(32, jnp.int32), jnp.asarray(50, jnp.int32)
+    out_j, m_j = ops.chunk_attention(q, k, v, q_offset=off,
+                                     score_masses=True, n_total=nt)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    out_p, m_p = ops.chunk_attention(q, k, v, q_offset=off,
+                                     score_masses=True, n_total=nt)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_j), np.asarray(m_p),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_ops_chunk_attention_masses_streaming_fallback():
+    """Buffers past the direct-path threshold take the two-pass streaming
+    jnp fallback — no (C, K) probability block — and still match dense."""
+    K = ops._DIRECT_SEQ + 256
+    q, k, v = _case(B=1, C=8, K=K, H=2, KV=1, hd=16, seed=5)
+    off = jnp.asarray(K - 8, jnp.int32)
+    nt = jnp.asarray(K - 3, jnp.int32)  # 5 valid rows, 3 masked
+    out, masses = ops.chunk_attention(q, k, v, q_offset=off,
+                                      score_masses=True, n_total=nt,
+                                      block_k=512)
+    rv = jnp.broadcast_to(((K - 8) + jnp.arange(8))[None] < nt, (1, 8))
+    want = ref.chunk_column_masses(q, k, q_offset=off, row_valid=rv)
+    np.testing.assert_allclose(np.asarray(masses), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_lookahead_score_row_validity_parity(window):
+    """The masked streaming primitive: random row-validity masks, a traced
+    observation base and a sliding window agree with the dense oracle on
+    the Pallas interpret path and the streaming jnp fallback."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, n_obs, H, KV, hd, Sk = 2, 16, 4, 2, 16, 96
+    qo = jax.random.normal(ks[0], (B, n_obs, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd))
+    rv = jax.random.bernoulli(ks[2], 0.6, (B, n_obs))
+    off = jnp.asarray(48, jnp.int32)  # traced, != default n_prompt base
+    want = ref.lookahead_score(qo, k, Sk, q_offset=off, window=window,
+                               row_valid=rv)
+    got = jax.jit(lambda qo, k, off: lookahead_score_pallas(
+        qo, k, Sk, q_offset=off, window=window, row_valid=rv,
+        block_k=32, interpret=True))(qo, k, off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-5)
+    got2 = ops._chunked_lookahead_score(qo, k, Sk, kv_mask=None,
+                                        window=window, q_offset=off,
+                                        row_valid=rv, block_k=32)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               atol=2e-6, rtol=2e-5)
+
+
+def test_lookahead_score_all_valid_matches_unmasked():
+    """row_valid=None and an all-True mask are the same computation."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 2)
+    B, n_obs, H, KV, hd, Sk = 1, 8, 2, 1, 16, 64
+    qo = jax.random.normal(ks[0], (B, n_obs, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd))
+    base = lookahead_score_pallas(qo, k, Sk - n_obs, block_k=32,
+                                  interpret=True)
+    masked = lookahead_score_pallas(qo, k, Sk - n_obs,
+                                    row_valid=jnp.ones((B, n_obs), bool),
+                                    block_k=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(masked))
+
+
+# ---------------------------------------------------------------------------
+# pipeline level: kept-set regression over every single-pass policy
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 80))
+                       .astype(np.int32))
+    return cfg, params, lkv, toks
+
+
+def _kept(cache):
+    m = np.asarray(cache["attn"]["mask"])
+    p = np.asarray(cache["attn"]["pos"])
+    L, B, _, KV = m.shape
+    return {
+        (lyr, b, h): frozenset(p[lyr, b, m[lyr, b, :, h], h].tolist())
+        for lyr in range(L) for b in range(B) for h in range(KV)
+    }
+
+
+@pytest.mark.parametrize("policy", policies.SINGLE_PASS)
+def test_kept_sets_bit_equal_every_single_pass_policy(model, policy):
+    """The non-negotiable invariant of the fused refactor: chunked prefill
+    (kernel-emitted scores) evicts exactly like monolithic prefill for
+    every single-pass policy, including gt_oracle's deferred Y suffix."""
+    cfg, params, lkv, toks = model
+    ev = EvictionConfig(budget=8)
+    seeds = jnp.asarray([3], jnp.int32)
+    gt_boundary = 64 if policy == "gt_oracle" else None
+    if policy == "gt_oracle":
+        mono = tf.prefill(params, cfg, toks, policy="gt_oracle",
+                          gt_boundary=gt_boundary, evict=ev, extra_slots=2)
+    else:
+        mono = policies.run_eviction(
+            policy, params, cfg, toks, evict=ev,
+            lkv_params=lkv if policy == "lookaheadkv" else None,
+            extra_slots=2, seeds=seeds)
+    chunked = policies.run_eviction_chunked(
+        policy, params, cfg, toks, chunk=32, evict=ev,
+        lkv_params=lkv if policy == "lookaheadkv" else None,
+        gt_boundary=gt_boundary, extra_slots=2, seeds=seeds)
+    assert _kept(mono.cache) == _kept(chunked.cache)

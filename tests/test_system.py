@@ -22,6 +22,11 @@ from repro.models import transformer as tf
 from repro.optim import adam
 from repro.serving.engine import Request, ServingEngine
 
+# the lockstep engine is exercised on purpose as the paper-shaped baseline;
+# silence only its expected deprecation so real warnings stay visible
+pytestmark = pytest.mark.filterwarnings(
+    r"ignore:ServingEngine \(lockstep\) is deprecated:DeprecationWarning")
+
 
 def _recall_at_k(s_pred, s_gt, k):
     """Mean over (L,B,H) of |top-k(pred) ∩ top-k(gt)| / k."""
