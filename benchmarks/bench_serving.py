@@ -77,9 +77,7 @@ def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int,
 
 
 def _clone(reqs):
-    return [Request(uid=r.uid, prompt=r.prompt,
-                    max_new_tokens=r.max_new_tokens, arrival_s=r.arrival_s)
-            for r in reqs]
+    return [r.clone() for r in reqs]
 
 
 def _metrics(reqs, wall, *, tracks_gaps: bool = True):

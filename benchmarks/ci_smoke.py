@@ -10,7 +10,10 @@ Gated verdicts:
   working set (including the fused score kernel) fits v5e's ~16 MB;
 * ``serving/longtail_verdict`` — on the compact long-tail trace the
   chunked engine compiles strictly fewer programs than the bucketed
-  baseline *and* cuts p95 TPOT.
+  baseline *and* cuts p95 TPOT;
+* ``prefix/reuse_verdict``     — on the Zipf shared-prefix trace the
+  radix-trie prompt cache admits a fully cached prompt faster than one
+  uncached chunk prefills, with >= 2x aggregate TTFT improvement.
 
 The JSON artifact carries every reported benchmark row plus the verdict
 map, so a red gate links straight to the number that moved.
@@ -24,7 +27,8 @@ import sys
 import time
 
 # every row name ending in ``_verdict`` gates the job
-SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving")
+SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving",
+          "benchmarks.bench_prefix")
 
 
 def main() -> None:

@@ -135,11 +135,41 @@ class ScoreState(NamedTuple):
     Leaves carry a leading layer axis L (the transformer layer scan slices
     it per layer).  Fields are ``None`` for policies that don't need them —
     the pytree structure is static per compiled (chunk, policy) program.
+
+    ``snapshot``/``restore`` make the state prefix-cacheable: at a chunk
+    boundary ``n`` (with every streamed chunk full and the true prompt
+    length >= ``n``) the state is a pure function of the first ``n`` prompt
+    tokens — chunk updates never read the rows past the boundary, the
+    cumulative accumulator is exactly zero there (masked softmax columns
+    underflow to +0.0), and per-request randomness (``Request.seed``)
+    enters only at finalize (``eviction.position_scores`` folds it in), so
+    a snapshot is bit-identical across all requests sharing the prefix.
     """
 
     acc: Optional[jnp.ndarray] = None   # (L, B, H, K) f32 column-mass sums
     cnt: Optional[jnp.ndarray] = None   # ()  f32 scoring queries seen so far
     qbuf: Optional[jnp.ndarray] = None  # (L, B, W, H, hd) newest W rot. queries
+
+    def snapshot(self, n: int) -> "ScoreState":
+        """Capacity-independent snapshot at chunk boundary ``n``: the
+        accumulator keeps only its first ``n`` key columns (columns past a
+        boundary are exact +0.0 — no query has attended to them), the
+        rolling query window and count are boundary state already."""
+        if self.acc is None:
+            return self
+        return self._replace(acc=self.acc[..., :n])
+
+    def restore(self, capacity: int) -> "ScoreState":
+        """Re-inflate a snapshot for a ``capacity``-deep key buffer.  The
+        zero right-pad reproduces the untouched tail of a freshly streamed
+        accumulator bitwise (0.0 + 0.0 stays +0.0 under later adds)."""
+        if self.acc is None:
+            return self
+        pad = capacity - self.acc.shape[-1]
+        assert pad >= 0, \
+            f"snapshot wider ({self.acc.shape[-1]}) than capacity {capacity}"
+        width = [(0, 0)] * (self.acc.ndim - 1) + [(0, pad)]
+        return self._replace(acc=jnp.pad(self.acc, width))
 
 
 def stream_window(policy: str, window_size: int) -> int:

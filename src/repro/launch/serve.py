@@ -22,8 +22,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import policies
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import (BucketedEngine, ContinuousEngine, Request,
-                           ServingEngine)
+from repro.serving import (BucketedEngine, ContinuousEngine, PrefixCache,
+                           Request, ServingEngine)
 
 
 def main():
@@ -43,6 +43,12 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chunk", type=int, default=32,
                     help="prefill chunk size (continuous engine)")
+    ap.add_argument("--prefix-cache-mb", type=int, default=0,
+                    help="radix-trie prompt-cache budget in MB (continuous "
+                         "engine; 0 disables prefix reuse)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of a shared system-prompt prefix planted "
+                         "in every request (rounded down to whole chunks)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -57,6 +63,14 @@ def main():
             print(f"loaded lookahead modules from {args.lkv_ckpt}")
 
     rng = np.random.default_rng(args.seed)
+    streamable = (args.continuous and args.policy not in policies.MULTI_PASS
+                  and args.policy != "full")
+    if args.prefix_cache_mb and not streamable:
+        print("note: --prefix-cache-mb requires the chunked continuous "
+              "engine (--continuous with a streamable policy); ignoring it")
+    if args.shared_prefix and not args.continuous:
+        print("note: --shared-prefix shapes --continuous traffic only; "
+              "ignoring it")
     if args.continuous:
         if args.policy in policies.MULTI_PASS or args.policy == "full":
             # draft-based baselines and 'full' cannot stream prefill chunks;
@@ -69,21 +83,37 @@ def main():
                     lkv_params=lkv, num_slots=args.slots,
                     max_new_tokens=args.max_new, eos_id=-1)
         else:
+            prefix_cache = None
+            if args.prefix_cache_mb:
+                prefix_cache = PrefixCache(
+                    chunk=args.chunk,
+                    max_bytes=args.prefix_cache_mb << 20)
             eng = ContinuousEngine(
                 params, cfg, policy=args.policy,
                 evict=EvictionConfig(budget=args.budget, draft_len=8),
                 lkv_params=lkv, num_slots=args.slots, chunk=args.chunk,
                 max_context=max(args.n_in, args.chunk),
-                max_new_tokens=args.max_new, eos_id=-1)
+                max_new_tokens=args.max_new, eos_id=-1,
+                prefix_cache=prefix_cache)
+        shared = (args.shared_prefix // args.chunk) * args.chunk
+        system = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
         lens = rng.integers(args.n_in // 2, args.n_in + 1, args.requests)
         reqs = [Request(uid=i,
-                        prompt=rng.integers(0, cfg.vocab_size,
-                                            int(n)).astype(np.int32),
+                        prompt=np.concatenate([
+                            system,
+                            rng.integers(0, cfg.vocab_size,
+                                         int(n)).astype(np.int32)]),
                         max_new_tokens=args.max_new)
                 for i, n in enumerate(lens)]
         t0 = time.time()
         done = eng.run(reqs)
         wall = time.time() - t0
+        if getattr(eng, "prefix_cache", None) is not None:
+            p = eng.stats["prefix"]
+            print(f"prefix cache: hit-rate {p['hit_rate']:.2f}, "
+                  f"{p['cached_tokens']}/{p['prompt_tokens']} prompt tokens "
+                  f"served from shared prefixes, "
+                  f"{eng.prefix_cache.stats()['bytes'] / 1e6:.2f} MB resident")
     else:
         with warnings.catch_warnings():  # explicit lockstep-baseline request
             warnings.simplefilter("ignore", DeprecationWarning)

@@ -582,6 +582,41 @@ def init_chunk_state(cfg: ModelConfig, policy: str, batch: int,
                       pos=jnp.zeros((), jnp.int32))
 
 
+def snapshot_chunk_state(state: ChunkState, n: int) -> ChunkState:
+    """Chunk-boundary snapshot of a streaming prefill: the first ``n``
+    buffer columns of K/V plus the trimmed ``ScoreState`` — everything a
+    later request sharing this ``n``-token prompt prefix needs to resume
+    at ``pos = n``.
+
+    Soundness (why the snapshot is shareable): every ``prefill_chunk``
+    quantity at a boundary covered by *full* chunks is a pure function of
+    the prefix tokens alone — attention is causal, the traced ``n_total``
+    only gates rows at or past it (all prefix rows are valid whenever the
+    requesting prompt is at least ``n`` long), and per-request seeds enter
+    only at finalize.  So the snapshot taken while serving one request is
+    bit-identical to the state any other request would have computed for
+    the same prefix, at the same buffer capacity."""
+    assert n <= state.k.shape[2], "snapshot deeper than the KV buffer"
+    return ChunkState(
+        k=state.k[:, :, :n], v=state.v[:, :, :n],
+        score=state.score.snapshot(n), pos=jnp.asarray(n, jnp.int32),
+    )
+
+
+def resume_chunk_state(snap: ChunkState, capacity: int) -> ChunkState:
+    """Inverse of ``snapshot_chunk_state``: zero-pad the trimmed buffers
+    back to ``capacity`` (fresh buffers are zero-initialized, so the
+    restored state is bitwise the state a request would have reached by
+    streaming the prefix itself) and resume at ``pos = n``."""
+    n = snap.k.shape[2]
+    assert capacity >= n, f"capacity {capacity} < snapshot depth {n}"
+    width = [(0, 0), (0, 0), (0, capacity - n), (0, 0), (0, 0)]
+    return ChunkState(
+        k=jnp.pad(snap.k, width), v=jnp.pad(snap.v, width),
+        score=snap.score.restore(capacity), pos=jnp.asarray(n, jnp.int32),
+    )
+
+
 def _ffn_residual(h, lp, cfg: ModelConfig, *, lora_l=None, lora_mask=None,
                   ls: float = 1.0):
     """The post-attention half of a block (MoE or MLP residual) — the one

@@ -4,9 +4,12 @@
                    the token-budget step planner (``plan_step``)
     batching.py  — ChunkCompileCache (keyed (chunk, batch, policy)) and the
                    deprecated bucket utilities
+    prefix_cache.py — radix-trie prompt cache: refcounted chunk-boundary
+                   (KV, ScoreState) snapshots shared across requests
     engine.py    — ContinuousEngine (chunked prefill interleaved with
-                   decode); deprecated ServingEngine (lockstep) and
-                   BucketedEngine (pad-to-bucket prefill)
+                   decode, optional prefix-aware KV reuse); deprecated
+                   ServingEngine (lockstep) and BucketedEngine
+                   (pad-to-bucket prefill)
 """
 
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
@@ -14,11 +17,13 @@ from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     bucket_for, pad_to_bucket)
 from repro.serving.engine import (BucketedEngine, ContinuousEngine, Request,
                                   RequestState, ServingEngine, cache_bytes)
+from repro.serving.prefix_cache import PrefixCache, PrefixEntry
 from repro.serving.scheduler import SlotScheduler, plan_step
 
 __all__ = [
     "BucketedEngine", "ChunkCompileCache", "ContinuousEngine",
-    "DEFAULT_BUCKETS", "PrefillCompileCache", "Request", "RequestState",
-    "ServingEngine", "SlotScheduler", "batch_bucket", "bucket_for",
-    "cache_bytes", "pad_to_bucket", "plan_step",
+    "DEFAULT_BUCKETS", "PrefillCompileCache", "PrefixCache", "PrefixEntry",
+    "Request", "RequestState", "ServingEngine", "SlotScheduler",
+    "batch_bucket", "bucket_for", "cache_bytes", "pad_to_bucket",
+    "plan_step",
 ]

@@ -77,8 +77,12 @@ class ChunkCompileCache:
         return _compile_count(self._fns)
 
     def stats(self) -> dict:
+        # ``keys`` lets tests pin the exact program set: a prefix-cache hit
+        # resumes with buffer shapes identical to a cold prefill, so serving
+        # a hit must neither add a key nor a compiled shape signature.
         return {"entries": len(self._fns), "hits": self.hits,
-                "misses": self.misses, "compiles": self.compile_count()}
+                "misses": self.misses, "compiles": self.compile_count(),
+                "keys": self.keys}
 
 
 # ---------------------------------------------------------------------------

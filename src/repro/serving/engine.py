@@ -52,6 +52,7 @@ from repro.models import transformer as tf
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     PrefillCompileCache, _batch_bucket,
                                     _bucket_for, _pad_to_bucket)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (Request, RequestState, SlotScheduler,
                                      plan_step)
 
@@ -167,14 +168,17 @@ class ServingEngine:
 
 
 class _InflightPrefill:
-    """Host-side cursor of the one streaming prefill in flight."""
+    """Host-side cursor of the one streaming prefill in flight.  ``tip``
+    is the deepest pinned prefix-cache entry along this request's prompt
+    (the resume point on a hit, then each freshly inserted boundary)."""
 
-    __slots__ = ("req", "state", "n", "s", "logits")
+    __slots__ = ("req", "state", "n", "s", "logits", "tip")
 
     def __init__(self, req: Request, state, n: int):
         self.req, self.state, self.n = req, state, n
         self.s = 0
         self.logits = None
+        self.tip = None
 
 
 class _SlotDecodeMixin:
@@ -254,6 +258,16 @@ class ContinuousEngine(_SlotDecodeMixin):
     1/2/4/… steps with per-slot cursors and an active mask; a slot that
     finishes mid-chunk has its surplus tokens truncated at collect time
     (greedy decode is prefix-stable) and retires at the chunk boundary.
+
+    With ``prefix_cache`` set (a ``serving.prefix_cache.PrefixCache``),
+    admissions consult a radix trie of chunk-boundary ``(KV, ScoreState)``
+    snapshots: a hit resumes streaming at the shared prefix's end — the
+    cached prefix's attention *and* its eviction-score accumulation are
+    both skipped — and a prompt that is exactly a cached prefix admits
+    with zero prefill chunks (TTFT ~ one finalize).  Because the resumed
+    state is bit-identical to what the request would have streamed itself,
+    served tokens and kept sets are unchanged (the differential trace
+    suite in tests/test_prefix_cache.py asserts this per policy).
     """
 
     def __init__(
@@ -272,6 +286,8 @@ class ContinuousEngine(_SlotDecodeMixin):
         eos_id: int = 0,
         decode_evict: bool = False,
         decode_chunk: int = 8,
+        prefix_cache: Optional[PrefixCache] = None,
+        capture_admission: bool = False,  # stash mask/pos on each Request
     ):
         assert tf.chunkable(cfg), \
             "chunked continuous batching serves attention-only decoder archs"
@@ -309,6 +325,14 @@ class ContinuousEngine(_SlotDecodeMixin):
         self._decode_fns: dict = {}
         self._insert_fn = jax.jit(tf.insert_request_cache)
         self.stats: dict = {}
+        # prefix-aware KV reuse: chunk-boundary (KV, ScoreState) snapshots
+        # shared across requests via a radix trie (serving/prefix_cache.py).
+        # A hit resumes mid-prefill with identical streamed state, so the
+        # served tokens and kept sets are bit-equal to an uncached serve.
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            prefix_cache.bind(chunk=chunk, policy=policy, model=params)
+        self.capture_admission = capture_admission
 
     # -- compile-cache bodies ------------------------------------------------
     def _build(self, kind: str, policy: str):
@@ -388,7 +412,6 @@ class ContinuousEngine(_SlotDecodeMixin):
         active = np.zeros(self.num_slots, bool)
         remaining = np.zeros(self.num_slots, np.int64)
         last_emit = np.zeros(self.num_slots, np.float64)
-        pf: Optional[_InflightPrefill] = None
         # fused Pallas scoring requires a *static* per-layer window —
         # patterned local:global archs trace the window inside the layer
         # scan, which routes ops.chunk_attention to the jnp fallback
@@ -398,58 +421,101 @@ class ContinuousEngine(_SlotDecodeMixin):
                       "score_path": ("pallas-fused"
                                      if ops.use_pallas() and static_window
                                      else "jnp-fallback")}
-        since_decode = 0
+        if self.prefix_cache is not None:
+            self.stats.update(prefix_hits=0, prefix_misses=0,
+                              prefix_tokens_skipped=0)
 
-        while sched.has_work() or pf is not None:
-            now = time.perf_counter() - t0
-            if pf is None:
-                req = sched.next_request(now)
-                if req is not None:
-                    pf = self._begin_prefill(req)
-            if pf is not None:
-                steps = self._pick_chunk(remaining, active) if active.any() \
-                    else max(self._chunks)
-                _, n_chunks = plan_step(
-                    token_budget=self.token_budget, chunk=self.chunk,
-                    n_active=int(active.sum()), decode_steps=steps,
-                    prefill_pending=True,
-                )
-                for _ in range(n_chunks):
-                    self._prefill_step(pf)
-                    if active.any():  # only live slots can be stalled
-                        since_decode += 1
-                    if pf.s >= pf.n:
-                        tok, live = self._admit(pf, sched, tok, live, active,
-                                                remaining, last_emit, t0)
-                        pf = None
-                        break
-            if active.any():
-                self.stats["max_prefill_between_decode"] = max(
-                    self.stats["max_prefill_between_decode"], since_decode)
-                since_decode = 0
-                steps = self._pick_chunk(remaining, active)
-                fn = self._decode_fn(steps)
-                tok, live, toks = fn(self.params, tok, live,
-                                     jnp.asarray(active))
-                self.stats["decode_chunks"] += 1
-                self._collect(np.asarray(toks), steps, sched, active,
-                              remaining, last_emit, t0)
-            elif pf is None:
-                if sched.has_arrived(time.perf_counter() - t0):
-                    continue  # a request is admissible right now
-                nxt = sched.next_arrival()
-                if nxt is None:
-                    break  # defensive: nothing queued, nothing running
-                wait = nxt - (time.perf_counter() - t0)
-                if wait > 0:
-                    time.sleep(min(wait, 0.05))
+        try:
+            self._run_loop(sched, tok, live, active, remaining, last_emit,
+                           t0)
+        finally:
+            if self.prefix_cache is not None:
+                self.stats["prefix_cache"] = self.prefix_cache.stats()
+                self.stats["prefix"] = sched.prefix_stats()
         return sched.finished
+
+    def _run_loop(self, sched, tok, live, active, remaining, last_emit,
+                  t0) -> None:
+        pf: Optional[_InflightPrefill] = None
+        since_decode = 0
+        try:
+            while sched.has_work() or pf is not None:
+                now = time.perf_counter() - t0
+                if pf is None:
+                    req = sched.next_request(now)
+                    if req is not None:
+                        pf = self._begin_prefill(req)
+                if pf is not None:
+                    steps = self._pick_chunk(remaining, active) if active.any() \
+                        else max(self._chunks)
+                    _, n_chunks = plan_step(
+                        token_budget=self.token_budget, chunk=self.chunk,
+                        n_active=int(active.sum()), decode_steps=steps,
+                        prefill_pending=True,
+                    )
+                    for _ in range(n_chunks):
+                        if pf.s < pf.n:  # a full prefix-cache hit has no chunks
+                            self._prefill_step(pf)
+                            if active.any():  # only live slots can be stalled
+                                since_decode += 1
+                        if pf.s >= pf.n:
+                            tok, live = self._admit(pf, sched, tok, live, active,
+                                                    remaining, last_emit, t0)
+                            pf = None
+                            break
+                if active.any():
+                    self.stats["max_prefill_between_decode"] = max(
+                        self.stats["max_prefill_between_decode"], since_decode)
+                    since_decode = 0
+                    steps = self._pick_chunk(remaining, active)
+                    fn = self._decode_fn(steps)
+                    tok, live, toks = fn(self.params, tok, live,
+                                         jnp.asarray(active))
+                    self.stats["decode_chunks"] += 1
+                    self._collect(np.asarray(toks), steps, sched, active,
+                                  remaining, last_emit, t0)
+                elif pf is None:
+                    if sched.has_arrived(time.perf_counter() - t0):
+                        continue  # a request is admissible right now
+                    nxt = sched.next_arrival()
+                    if nxt is None:
+                        break  # defensive: nothing queued, nothing running
+                    wait = nxt - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+        finally:
+            # an exception escaping the loop must not leak a trie pin: the
+            # cache outlives run() calls, and a leaked ref would make the
+            # pinned entry unevictable forever
+            if (pf is not None and pf.tip is not None
+                    and self.prefix_cache is not None):
+                self.prefix_cache.release(pf.tip)
+                pf.tip = None
 
     # -- internals -----------------------------------------------------------
     def _begin_prefill(self, req: Request) -> _InflightPrefill:
         n = len(req.prompt)
-        state = tf.init_chunk_state(self.cfg, self.policy, 1,
-                                    self._request_context(n))
+        cap = self._request_context(n)
+        if self.prefix_cache is not None:
+            # only snapshots streamed under this request's KV-buffer rung
+            # match — the condition for a bitwise-identical resume
+            entry = self.prefix_cache.lookup(req.prompt, capacity=cap)
+            if entry is not None:
+                # materialize before pinning: if it raises there is no
+                # _InflightPrefill yet, so a pin taken here could never be
+                # released by the loop's finally
+                state, logits = self.prefix_cache.materialize(entry, cap)
+                self.prefix_cache.acquire(entry)
+                pf = _InflightPrefill(req, state, n)
+                pf.s = entry.depth
+                pf.logits = logits  # the boundary chunk's next-token logits
+                pf.tip = entry
+                req.cached_prefix_tokens = entry.depth
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_tokens_skipped"] += entry.depth
+                return pf
+            self.stats["prefix_misses"] += 1
+        state = tf.init_chunk_state(self.cfg, self.policy, 1, cap)
         return _InflightPrefill(req, state, n)
 
     def _prefill_step(self, pf: _InflightPrefill) -> None:
@@ -461,6 +527,17 @@ class ContinuousEngine(_SlotDecodeMixin):
                                  jnp.asarray(pf.n, jnp.int32))
         pf.s += self.chunk
         self.stats["prefill_chunks"] += 1
+        # cache the boundary just crossed (whole-chunk prefixes only — a
+        # partial final chunk contains pad rows and is never cacheable)
+        if self.prefix_cache is not None and pf.s <= pf.n:
+            entry = self.prefix_cache.insert(
+                pf.req.prompt[:pf.s], state=pf.state, logits=pf.logits,
+                parent=pf.tip)
+            if entry is not None:
+                self.prefix_cache.acquire(entry)
+                if pf.tip is not None:  # the parent link keeps it alive now
+                    self.prefix_cache.release(pf.tip)
+                pf.tip = entry
 
     def _admit(self, pf, sched, tok, live, active, remaining, last_emit, t0):
         r = pf.req
@@ -468,6 +545,14 @@ class ContinuousEngine(_SlotDecodeMixin):
         seeds = _request_seeds([r])
         cache = fn(self.params, self.lkv_params, pf.state,
                    jnp.asarray(pf.n, jnp.int32), seeds)
+        if self.prefix_cache is not None and pf.tip is not None:
+            self.prefix_cache.release(pf.tip)
+            pf.tip = None
+        if self.capture_admission:
+            r.admission_cache = {
+                "mask": np.asarray(cache["attn"]["mask"]),
+                "pos": np.asarray(cache["attn"]["pos"]),
+            }
         pf.logits.block_until_ready()
         now = time.perf_counter() - t0
         first = int(jnp.argmax(pf.logits[0]))

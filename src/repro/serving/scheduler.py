@@ -87,10 +87,24 @@ class Request:
     finish_s: Optional[float] = None
     tpot_s: float = 0.0  # mean seconds per output token after the first
     max_gap_s: float = 0.0  # worst stall between consecutive token emissions
+    # -- prefix-cache fields -------------------------------------------
+    cached_prefix_tokens: int = 0  # prompt tokens resumed from a cache hit
+    admission_cache: Optional[dict] = None  # mask/pos of the admitted cache
+    # (engine's ``capture_admission`` debug flag; the differential trace
+    # harness compares kept sets through this)
 
     @property
     def eviction_seed(self) -> int:
         return self.uid if self.seed is None else self.seed
+
+    def clone(self) -> "Request":
+        """Fresh un-served copy carrying every field that shapes serving
+        (uid/prompt/seed/budget/arrival) — the one replay helper used by
+        benchmarks, examples, and the differential trace harness, so a new
+        serving-relevant field only needs to be added here."""
+        return Request(uid=self.uid, prompt=self.prompt, seed=self.seed,
+                       max_new_tokens=self.max_new_tokens,
+                       arrival_s=self.arrival_s)
 
 
 class SlotScheduler:
@@ -177,6 +191,22 @@ class SlotScheduler:
         req.state = RequestState.DECODE
         self.running[slot] = req
         return slot
+
+    def prefix_stats(self) -> dict:
+        """Aggregate prefix-reuse accounting over finished requests: how
+        many admissions hit the prompt cache and what fraction of all
+        prompt tokens were served from shared-prefix snapshots."""
+        total = sum(len(r.prompt) for r in self.finished)
+        cached = sum(r.cached_prefix_tokens for r in self.finished)
+        hits = sum(1 for r in self.finished if r.cached_prefix_tokens > 0)
+        return {
+            "requests": len(self.finished),
+            "prefix_hits": hits,
+            "hit_rate": hits / len(self.finished) if self.finished else 0.0,
+            "cached_tokens": cached,
+            "prompt_tokens": total,
+            "cached_token_frac": cached / total if total else 0.0,
+        }
 
     def retire(self, req: Request, *, now: float) -> int:
         """Free the request's slot; returns it for the engine to reuse."""

@@ -1,0 +1,485 @@
+"""Prefix-aware KV reuse: radix-trie invariants, ScoreState snapshot
+round-trips, and the differential trace suite.
+
+Three layers of proof, least to most end-to-end:
+
+1. **Trie invariants** (no model): refcounts never go negative, LRU never
+   evicts a pinned (in-flight) or parented entry, the byte budget is
+   respected after *every* insert/evict under adversarial interleavings,
+   and partial-chunk prefixes never match.
+2. **Snapshot properties** (model, no engine): ``ScoreState.snapshot /
+   restore`` (via ``transformer.snapshot_chunk_state / resume_chunk_
+   state``) round-trips bit-exact for every servable policy — including
+   the deferred-window query buffer — on both the jnp and forced-Pallas
+   dispatch paths, and a restored prefill finishes with the same kept sets
+   and logits as the uninterrupted one.
+3. **Differential traces** (the headline): serving a seeded randomized
+   Zipf-prefix trace through ``ContinuousEngine`` with the prefix cache on
+   emits bit-identical tokens and kept (layer, head, position) sets as
+   with it off — every servable single-pass policy, chunk sizes 128 and
+   256, prompts not divisible by the chunk.  Plus compile-count pinning:
+   a cache hit must not add a compile key or a compiled shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import EvictionConfig
+from repro.configs import get_smoke_config
+from repro.core import policies, scoring
+from repro.core.lookahead import init_lookahead_params
+from repro.models import transformer as tf
+from repro.serving import ChunkCompileCache, PrefixCache
+from trace_utils import kept_sets, make_trace_requests, run_trace
+from trace_utils import assert_differential
+
+# every policy the chunked continuous engine serves
+ENGINE_POLICIES = [p for p in policies.SINGLE_PASS
+                   if p not in ("gt_oracle", "full")]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
+    return cfg, params, lkv
+
+
+# ---------------------------------------------------------------------------
+# 1. radix-trie invariants (no model)
+# ---------------------------------------------------------------------------
+
+CHUNK = 4
+
+
+def _state(depth: int, fill: float, capacity: int = 16) -> tf.ChunkState:
+    """Tiny fake streaming state: column j of k/v carries ``fill + j`` so
+    materialized chains are checkable value-by-value."""
+    col = jnp.arange(capacity, dtype=jnp.float32) + fill
+    k = jnp.broadcast_to(col[None, None, :, None, None], (1, 1, capacity, 1, 2))
+    return tf.ChunkState(k=k, v=k + 0.5, score=scoring.ScoreState(),
+                         pos=jnp.asarray(depth, jnp.int32))
+
+
+def _logits(tag: float) -> jnp.ndarray:
+    return jnp.full((1, 4), tag, jnp.float32)
+
+
+def _tokens(seed: int, n: int) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, 50, n).astype(np.int32)
+
+
+def _check_invariants(cache: PrefixCache):
+    entries = list(cache._lru)
+    assert cache.bytes == sum(e.nbytes for e in entries)
+    assert cache.bytes <= cache.max_bytes
+    children = {id(e): 0 for e in entries}
+    for e in entries:
+        assert e.refs >= 0
+        if e.parent is not None:
+            assert e.parent in cache._lru, "child outlived its parent"
+            children[id(e.parent)] += 1
+    return {id(e): n for e, n in zip(entries, children.values())}
+
+
+def test_trie_lookup_and_partial_chunk_prefixes_never_match():
+    cache = PrefixCache(chunk=CHUNK, max_bytes=1 << 20)
+    t = _tokens(0, 8)
+    e4 = cache.insert(t[:4], state=_state(4, 0.0), logits=_logits(1))
+    e8 = cache.insert(t[:8], state=_state(8, 0.0), logits=_logits(2),
+                      parent=e4)
+    assert (e4.depth, e8.depth) == (4, 8) and e8.parent is e4
+    # exact and deeper lookups
+    assert cache.lookup(t[:8]) is e8
+    assert cache.lookup(np.concatenate([t, _tokens(1, 5)])) is e8
+    assert cache.lookup(t[:4]) is e4
+    # sharing 6 of 8 tokens matches only the aligned 4-deep entry — a
+    # partial-chunk prefix (6) never matches even though the trie edge does
+    probe = np.concatenate([t[:6], _tokens(2, 10)])
+    assert cache.lookup(probe) is e4
+    # sharing fewer tokens than one chunk matches nothing
+    assert cache.lookup(np.concatenate([t[:3], _tokens(3, 9)])) is None
+    assert cache.lookup(t[:3]) is None  # prompt shorter than a chunk
+    with pytest.raises(AssertionError):
+        cache.insert(t[:6], state=_state(6, 0.0), logits=_logits(9))
+    _check_invariants(cache)
+
+
+def test_lru_never_evicts_pinned_or_parented_entries():
+    one = PrefixCache(chunk=CHUNK, max_bytes=1 << 20)
+    per = one.insert(_tokens(0, 4), state=_state(4, 0.0),
+                     logits=_logits(0)).nbytes
+    cache = PrefixCache(chunk=CHUNK, max_bytes=2 * per)
+    t = _tokens(1, 8)
+    a = cache.insert(t[:4], state=_state(4, 1.0), logits=_logits(1))
+    b = cache.insert(t[:8], state=_state(8, 1.0), logits=_logits(2), parent=a)
+    cache.acquire(b)  # in-flight pin
+    # budget is full; a is parented, b is pinned -> nothing evictable, and
+    # the doomed insert must refuse *without* churning existing entries
+    assert cache.insert(_tokens(2, 4), state=_state(4, 2.0),
+                        logits=_logits(3)) is None
+    assert cache.evictions == 0
+    assert cache.lookup(t[:8]) is b and cache.bytes <= cache.max_bytes
+    cache.release(b)
+    # now b (LRU-evictable leaf) goes first, then a — never the reverse
+    c = cache.insert(_tokens(2, 4), state=_state(4, 2.0), logits=_logits(3))
+    assert c is not None
+    assert cache.lookup(t[:8]) is not b
+    _check_invariants(cache)
+    with pytest.raises(AssertionError):
+        cache.release(c)  # refcount underflow is loud, never negative
+
+
+def test_lru_recency_orders_eviction():
+    one = PrefixCache(chunk=CHUNK, max_bytes=1 << 20)
+    per = one.insert(_tokens(0, 4), state=_state(4, 0.0),
+                     logits=_logits(0)).nbytes
+    cache = PrefixCache(chunk=CHUNK, max_bytes=2 * per)
+    ta, tb, tc = _tokens(1, 4), _tokens(2, 4), _tokens(3, 4)
+    cache.insert(ta, state=_state(4, 1.0), logits=_logits(1))
+    cache.insert(tb, state=_state(4, 2.0), logits=_logits(2))
+    assert cache.lookup(ta) is not None  # touch a: b becomes LRU
+    cache.insert(tc, state=_state(4, 3.0), logits=_logits(3))
+    assert cache.lookup(tb) is None  # b evicted
+    assert cache.lookup(ta) is not None and cache.lookup(tc) is not None
+    _check_invariants(cache)
+
+
+def test_materialize_rebuilds_the_chain():
+    cache = PrefixCache(chunk=CHUNK, max_bytes=1 << 20)
+    t = _tokens(4, 8)
+    donor = _state(8, 7.0)
+    a = cache.insert(t[:4], state=donor, logits=_logits(1))
+    b = cache.insert(t[:8], state=donor, logits=_logits(2), parent=a)
+    state, logits = cache.materialize(b, capacity=12)
+    assert state.k.shape[2] == 12 and int(state.pos) == 8
+    np.testing.assert_array_equal(np.asarray(state.k[:, :, :8]),
+                                  np.asarray(donor.k[:, :, :8]))
+    assert not np.asarray(state.k[:, :, 8:]).any()  # zero tail
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(_logits(2)))
+
+
+def test_byte_budget_respected_under_adversarial_interleavings():
+    """Simulated engine protocol (lookup+pin, stream+insert, release) over
+    interleaved requests with a tight budget: after every operation the
+    byte budget holds, refcounts stay non-negative, and pinned tips are
+    never evicted mid-flight."""
+    rng = np.random.default_rng(7)
+    probe = PrefixCache(chunk=CHUNK, max_bytes=1 << 20)
+    per = probe.insert(_tokens(0, 4), state=_state(4, 0.0),
+                       logits=_logits(0)).nbytes
+    cache = PrefixCache(chunk=CHUNK, max_bytes=5 * per)
+    bases = [_tokens(s, 16) for s in range(3)]  # shared-prefix pool
+
+    class Sim:
+        def __init__(self, uid):
+            base = bases[int(rng.integers(3))]
+            depth = int(rng.integers(1, 5)) * CHUNK
+            self.prompt = base[:depth].copy()
+            if rng.random() < 0.5:  # diverge mid-pool: trie splits
+                self.prompt[-1] = 99 + uid
+            self.state = _state(0, float(uid), capacity=16)
+            self.s, self.tip = 0, None
+            hit = cache.lookup(self.prompt)
+            if hit is not None:
+                cache.acquire(hit)
+                self.tip, self.s = hit, hit.depth
+
+        def step(self):
+            self.s += CHUNK
+            self.state = self.state._replace(
+                pos=jnp.asarray(self.s, jnp.int32))
+            e = cache.insert(self.prompt[:self.s], state=self.state,
+                             logits=_logits(self.s), parent=self.tip)
+            if e is not None:
+                cache.acquire(e)
+                if self.tip is not None:
+                    cache.release(self.tip)
+                self.tip = e
+
+        def finish(self):
+            if self.tip is not None:
+                cache.release(self.tip)
+                self.tip = None
+
+    live, uid = [], 0
+    for _ in range(200):
+        op = rng.random()
+        if (op < 0.25 and len(live) < 6) or not live:
+            live.append(Sim(uid))
+            uid += 1
+        elif op < 0.85:
+            sim = live[int(rng.integers(len(live)))]
+            if sim.s < len(sim.prompt):
+                sim.step()
+        else:
+            sim = live.pop(int(rng.integers(len(live))))
+            sim.finish()
+        _check_invariants(cache)
+        for sim in live:  # a pinned in-flight tip is never evicted
+            if sim.tip is not None:
+                assert sim.tip in cache._lru
+    for sim in live:
+        sim.finish()
+    # all pins released: every refcount is exactly its child-entry count
+    for e in list(cache._lru):
+        assert e.refs == sum(1 for x in cache._lru if x.parent is e)
+    _check_invariants(cache)
+    assert cache.evictions > 0, "budget pressure never exercised eviction"
+
+
+# ---------------------------------------------------------------------------
+# 2. ScoreState / ChunkState snapshot properties
+# ---------------------------------------------------------------------------
+
+SNAP_CHUNK, SNAP_N, SNAP_BOUNDARY = 16, 40, 32
+
+
+def _stream(cfg, params, state, toks, n, policy, start=0):
+    n_arr = jnp.asarray(n, jnp.int32)
+    logits = None
+    for s in range(start, n, SNAP_CHUNK):
+        blk = np.zeros((1, SNAP_CHUNK), np.int32)
+        seg = toks[0, s:s + SNAP_CHUNK]
+        blk[0, :len(seg)] = seg
+        state, logits = tf.prefill_chunk(params, cfg, state,
+                                         jnp.asarray(blk), n_arr,
+                                         policy=policy)
+    return state, logits
+
+
+@pytest.mark.parametrize("backend", ["jnp", "forced-pallas"])
+@pytest.mark.parametrize("policy", ENGINE_POLICIES)
+def test_snapshot_restore_bit_exact(model, policy, backend, monkeypatch):
+    """snapshot -> restore at a chunk boundary reproduces every state leaf
+    bitwise (including the deferred-window query buffer), and finishing
+    the prefill from the restored state yields the same kept sets and
+    bitwise logits, on both dispatch paths."""
+    if backend == "forced-pallas":
+        monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    else:
+        monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    cfg, params, lkv = model
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, cfg.vocab_size, (1, SNAP_N)).astype(np.int32)
+    cap = policies.chunk_capacity_for(cfg, policy, SNAP_N, SNAP_CHUNK)
+    state0 = tf.init_chunk_state(cfg, policy, 1, cap)
+    mid, _ = _stream(cfg, params, state0, toks, SNAP_BOUNDARY, policy)
+    restored = tf.resume_chunk_state(
+        tf.snapshot_chunk_state(mid, SNAP_BOUNDARY), cap)
+    for a, b in zip(jax.tree.leaves(mid), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # continuation equivalence: stream the tail from both states
+    kw = dict(policy=policy,
+              lkv_params=lkv if policy == "lookaheadkv" else None,
+              seeds=jnp.asarray([3], jnp.int32))
+    ends = []
+    for st in (mid, restored):
+        end, logits = _stream(cfg, params, st, toks, SNAP_N, policy,
+                              start=SNAP_BOUNDARY)
+        cache = tf.prefill_finalize(
+            params, cfg, end, jnp.asarray(SNAP_N, jnp.int32),
+            evict=EvictionConfig(budget=8), **kw)
+        ends.append((cache, logits))
+    (c_mid, l_mid), (c_res, l_res) = ends
+    np.testing.assert_array_equal(np.asarray(l_mid), np.asarray(l_res))
+    for a, b in zip(jax.tree.leaves(c_mid), jax.tree.leaves(c_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_into_deeper_buffer_keeps_same_evictions(model):
+    """Cross-rung resume (snapshot from one buffer depth restored into a
+    deeper one) preserves the kept sets — masked softmax columns beyond
+    the frontier contribute exact zeros."""
+    cfg, params, _ = model
+    policy = "h2o"
+    rng = np.random.default_rng(12)
+    toks = rng.integers(0, cfg.vocab_size, (1, SNAP_N)).astype(np.int32)
+    cap = policies.chunk_capacity_for(cfg, policy, SNAP_N, SNAP_CHUNK)
+    base = tf.init_chunk_state(cfg, policy, 1, cap)
+    mid, _ = _stream(cfg, params, base, toks, SNAP_BOUNDARY, policy)
+    snap = tf.snapshot_chunk_state(mid, SNAP_BOUNDARY)
+    caches = []
+    for depth in (cap, 2 * cap):
+        st = tf.resume_chunk_state(snap, depth)
+        end, _ = _stream(cfg, params, st, toks, SNAP_N, policy,
+                         start=SNAP_BOUNDARY)
+        caches.append(tf.prefill_finalize(
+            params, cfg, end, jnp.asarray(SNAP_N, jnp.int32), policy=policy,
+            evict=EvictionConfig(budget=8)))
+    kept = [kept_sets({"mask": np.asarray(c["attn"]["mask"]),
+                       "pos": np.asarray(c["attn"]["pos"])})
+            for c in caches]
+    assert kept[0] == kept[1]
+
+
+# ---------------------------------------------------------------------------
+# 3. differential trace suite (the acceptance property)
+# ---------------------------------------------------------------------------
+
+
+def _trace(cfg, chunk, seed=3):
+    # prompts stay within one KV-buffer rung; suffix 77 exercises prompts
+    # not divisible by either chunk size, suffix 0 yields exact duplicates
+    return make_trace_requests(
+        cfg, chunk=chunk, seed=seed, n_requests=5, max_new=3,
+        n_prefixes=3, prefix_chunks=(1, 2) if chunk <= 128 else (1,),
+        suffix_lens=(0, 1, 77))
+
+
+@pytest.mark.parametrize("chunk", [128, 256])
+@pytest.mark.parametrize("policy", ENGINE_POLICIES)
+def test_differential_trace(model, policy, chunk):
+    """Tokens and kept sets are bit-equal with the prefix cache on vs. off
+    for every servable single-pass policy and both chunk sizes."""
+    cfg, params, lkv = model
+    reqs = _trace(cfg, chunk)
+    eng, cache = assert_differential(cfg, params, lkv, policy=policy,
+                                     requests=reqs, chunk=chunk,
+                                     decode_chunk=2)
+    # the property must not hold vacuously
+    assert eng.stats["prefix_hits"] > 0
+    assert eng.stats["prefix_tokens_skipped"] > 0
+    assert cache.stats()["bytes"] > 0
+
+
+def test_differential_trace_with_tight_budget(model):
+    """Eviction pressure mid-trace (budget ~ two entries) must not perturb
+    served tokens either — a miss-after-evict just streams normally."""
+    cfg, params, lkv = model
+    reqs = _trace(cfg, 128, seed=9)
+    probe = PrefixCache(chunk=128, max_bytes=1 << 30)
+    _, eng_probe = run_trace(cfg, params, lkv, policy="h2o", requests=reqs,
+                             chunk=128, prefix_cache=probe, decode_chunk=2)
+    per = probe.bytes // max(probe.stats()["entries"], 1)
+    eng, cache = assert_differential(cfg, params, lkv, policy="h2o",
+                                     requests=reqs, chunk=128,
+                                     cache_bytes=2 * per, decode_chunk=2)
+    assert cache.stats()["bytes"] <= 2 * per
+
+
+def test_differential_trace_mixed_rungs(model):
+    """Requests on different KV-buffer rungs (a long prompt escalates past
+    ``max_context``): snapshots only serve same-rung hits — chains are
+    capacity-homogeneous and cross-rung lookups miss — so tokens and kept
+    sets stay bit-equal even under mixed buffer shapes."""
+    cfg, params, _ = model
+    from repro.serving import Request
+    rng = np.random.default_rng(6)
+    shared = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    tail = rng.integers(0, cfg.vocab_size, 96).astype(np.int32)
+    long_p = np.concatenate([shared, tail])  # rung above max_context=64
+    reqs = [
+        Request(uid=0, prompt=long_p, max_new_tokens=2, arrival_s=0.00),
+        Request(uid=1, prompt=shared.copy(), max_new_tokens=2,
+                arrival_s=0.02),  # base rung; shares tokens, not the rung
+        Request(uid=2, prompt=long_p.copy(), max_new_tokens=2,
+                arrival_s=0.04),  # same-rung duplicate: the legal full hit
+        Request(uid=3, prompt=shared.copy(), max_new_tokens=2,
+                arrival_s=0.06),  # base-rung duplicate of uid 1
+    ]
+    base, _ = run_trace(cfg, params, None, policy="h2o", requests=reqs,
+                        chunk=32, max_context=64, decode_chunk=2)
+    cache = PrefixCache(chunk=32, max_bytes=1 << 30)
+    got, eng = run_trace(cfg, params, None, policy="h2o", requests=reqs,
+                         chunk=32, max_context=64, decode_chunk=2,
+                         prefix_cache=cache)
+    for uid, ref in base.items():
+        assert got[uid].out_tokens == ref.out_tokens, uid
+        assert kept_sets(got[uid].admission_cache) == kept_sets(
+            ref.admission_cache), uid
+    # uid 2 hit its same-rung snapshot in full; the base-rung requests
+    # never consumed the long prompt's cross-rung entries
+    assert got[2].cached_prefix_tokens == len(long_p)
+    assert got[1].cached_prefix_tokens == 0
+    assert got[3].cached_prefix_tokens == 0
+    assert eng.stats["prefix_hits"] == 1
+
+
+def test_random_policy_seed_stays_out_of_cached_state(model):
+    """Two requests with identical prompts but different uids share the
+    cached prefix, yet still draw decorrelated random evictions — the
+    per-request fold_in happens at finalize, not in the snapshot."""
+    cfg, params, _ = model
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 128).astype(np.int32)
+    from repro.serving import Request
+    reqs = [Request(uid=i, prompt=prompt, max_new_tokens=2,
+                    arrival_s=0.01 * i) for i in range(2)]
+    cache = PrefixCache(chunk=128, max_bytes=1 << 30)
+    got, eng = run_trace(cfg, params, None, policy="random", requests=reqs,
+                         chunk=128, prefix_cache=cache, decode_chunk=2)
+    assert eng.stats["prefix_hits"] == 1  # second request fully cached
+    assert got[1].cached_prefix_tokens == 128
+    assert kept_sets(got[0].admission_cache) != kept_sets(
+        got[1].admission_cache)
+
+
+# ---------------------------------------------------------------------------
+# compile-count pinning + stats (a hit must not compile anything new)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_compile_cache_stats_direct():
+    built = []
+
+    def build(kind, policy):
+        built.append((kind, policy))
+        return lambda x: x
+
+    cc = ChunkCompileCache(build)
+    f = cc.get("chunk", 16, 1, "h2o")
+    cc.get("chunk", 16, 1, "h2o")
+    cc.get("finalize", 16, 1, "h2o")
+    s = cc.stats()
+    assert s["entries"] == 2 and s["hits"] == 1 and s["misses"] == 2
+    assert s["keys"] == [("chunk", 16, 1, "h2o"), ("finalize", 16, 1, "h2o")]
+    assert s["compiles"] == 0  # nothing invoked yet
+    f(jnp.zeros(2))
+    assert cc.stats()["compiles"] == 1
+    assert built == [("chunk", "h2o"), ("finalize", "h2o")]
+
+
+def test_prefix_hits_pin_compile_counts_and_report_stats(model):
+    """Replaying a warmed trace serves every admission from the trie: the
+    compile cache gains no key and no compiled shape signature, and the
+    engine/scheduler stats report hit-rate, skipped tokens, and bytes."""
+    cfg, params, lkv = model
+    # seed 5's trace contains chunk-aligned prompts — full-hit candidates
+    # on the replay (a warmed trie covers their entire length)
+    reqs = _trace(cfg, 128, seed=5)
+    cache = PrefixCache(chunk=128, max_bytes=1 << 30)
+    max_new = max(r.max_new_tokens for r in reqs)
+    max_len = max(len(r.prompt) for r in reqs)
+    from repro.serving import ContinuousEngine
+    eng = ContinuousEngine(
+        params, cfg, policy="h2o", evict=EvictionConfig(budget=8),
+        num_slots=2, chunk=128, max_context=max_len,
+        max_new_tokens=max_new, eos_id=-1, prefix_cache=cache,
+        decode_chunk=2)
+
+    def clone(rs):
+        return [r.clone() for r in rs]
+
+    eng.run(clone(reqs))
+    warm = eng.chunk_cache.stats()
+    assert warm["entries"] == 2  # one chunk + one finalize program
+    done = eng.run(clone(reqs))
+    after = eng.chunk_cache.stats()
+    assert after["keys"] == warm["keys"]
+    assert after["entries"] == 2
+    assert after["compiles"] == warm["compiles"], \
+        "a prefix-cache hit triggered a fresh compile"
+    # second replay: every request hits, duplicates hit fully
+    assert eng.stats["prefix_hits"] == len(reqs)
+    assert eng.stats["prefix_misses"] == 0
+    assert eng.stats["prefix_tokens_skipped"] >= sum(
+        (len(r.prompt) // 128) * 128 for r in reqs)
+    sps = eng.stats["prefix"]
+    assert sps["prefix_hits"] == len(reqs) and sps["hit_rate"] == 1.0
+    assert 0 < eng.stats["prefix_cache"]["bytes"] <= cache.max_bytes
+    assert any(r.cached_prefix_tokens == len(r.prompt) for r in done), \
+        "no fully-cached admission in the replay"

@@ -1,0 +1,95 @@
+"""Differential trace-testing harness for prefix-aware KV reuse.
+
+The load-bearing assertion of the prompt cache: serving a randomized trace
+through ``ContinuousEngine`` with the prefix cache **on** must emit
+*bit-identical tokens and kept (layer, head, position) sets* per request
+as serving the same trace with the cache **off** — for every servable
+policy, across chunk sizes, including prompts not divisible by the chunk.
+
+Helpers here are shared by ``tests/test_prefix_cache.py`` (and usable by
+future suites): a seeded Zipf-prefix trace (wrapping
+``repro.data.synthetic.make_prefix_trace`` into ``Request`` objects), a
+single-engine trace runner that captures each request's admitted cache
+(``capture_admission``), and the differential assertion itself.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.common.config import EvictionConfig
+from repro.data.synthetic import make_prefix_trace
+from repro.serving import ContinuousEngine, PrefixCache, Request
+
+__all__ = ["make_trace_requests", "kept_sets", "run_trace",
+           "assert_differential", "make_prefix_trace"]
+
+
+def make_trace_requests(cfg, *, chunk, seed=0, n_requests=5, max_new=3,
+                        **trace_kw) -> list[Request]:
+    """Seeded randomized request trace: Zipf-shared chunk-aligned prefixes,
+    mixed (non-divisible) prompt lengths, staggered Poisson arrivals."""
+    trace = make_prefix_trace(seed, n_requests, cfg.vocab_size, chunk=chunk,
+                              **trace_kw)
+    return [Request(uid=i, prompt=p, max_new_tokens=max_new,
+                    arrival_s=arr)
+            for i, (p, arr) in enumerate(trace)]
+
+
+def _clone(reqs: list[Request]) -> list[Request]:
+    return [r.clone() for r in reqs]
+
+
+def kept_sets(admission: dict) -> dict:
+    """{(layer, head): frozenset(kept positions)} from a captured
+    admission cache (batch axis is the single prefill row)."""
+    m, p = admission["mask"], admission["pos"]
+    L, _, _, KV = m.shape
+    return {
+        (lyr, h): frozenset(p[lyr, 0, m[lyr, 0, :, h], h].tolist())
+        for lyr in range(L) for h in range(KV)
+    }
+
+
+def run_trace(cfg, params, lkv, *, policy, requests, chunk,
+              prefix_cache: Optional[PrefixCache] = None, budget=8,
+              num_slots=2, **engine_kw):
+    """Serve a clone of ``requests``; returns ({uid: Request}, engine).
+
+    By default ``max_context`` covers the whole trace so every request
+    shares the engine's base KV-buffer rung — the standard-traffic
+    configuration.  Pass ``max_context`` explicitly to exercise mixed
+    rungs (the cache then only serves same-rung snapshots)."""
+    max_new = max(r.max_new_tokens for r in requests)
+    max_len = max(len(r.prompt) for r in requests)
+    eng = ContinuousEngine(
+        params, cfg, policy=policy, evict=EvictionConfig(budget=budget),
+        lkv_params=lkv if policy == "lookaheadkv" else None,
+        num_slots=num_slots, chunk=chunk,
+        max_context=engine_kw.pop("max_context", max_len),
+        max_new_tokens=max_new, eos_id=-1, prefix_cache=prefix_cache,
+        capture_admission=True, **engine_kw)
+    done = eng.run(_clone(requests))
+    assert len(done) == len(requests)
+    return {r.uid: r for r in done}, eng
+
+
+def assert_differential(cfg, params, lkv, *, policy, requests, chunk,
+                        cache_bytes=1 << 30, **kw):
+    """The headline property: cache-on serving is observationally
+    bit-identical to cache-off serving, request by request.  Returns
+    (cache-on engine, cache) so callers can additionally assert hit
+    counts, compile counts, or budget behaviour."""
+    base, _ = run_trace(cfg, params, lkv, policy=policy, requests=requests,
+                        chunk=chunk, prefix_cache=None, **kw)
+    cache = PrefixCache(chunk=chunk, max_bytes=cache_bytes)
+    got, eng = run_trace(cfg, params, lkv, policy=policy, requests=requests,
+                         chunk=chunk, prefix_cache=cache, **kw)
+    for uid, ref in base.items():
+        r = got[uid]
+        assert r.out_tokens == ref.out_tokens, \
+            f"policy={policy} chunk={chunk} uid={uid}: tokens diverged"
+        assert kept_sets(r.admission_cache) == kept_sets(
+            ref.admission_cache), \
+            f"policy={policy} chunk={chunk} uid={uid}: kept sets diverged"
+    return eng, cache
