@@ -22,7 +22,9 @@ the shape that breaks the bucket ladder: the long prompts compile fresh
 power-of-two bucket programs and stall every live decode slot for whole
 monolithic prefills.  Reported per engine: throughput, p95 TTFT, p95 TPOT,
 max decode stall (worst gap between consecutive token emissions of any
-request), and the jit-compile count.  The chunked engine must compile
+request), the jit-compile count, and the peak device KV bytes the engine
+reserves (``kv_bytes_peak`` — BENCH_*.json tracks the memory trajectory
+across PRs; ``benchmarks/bench_paged.py`` is the bench that *varies* it).  The chunked engine must compile
 strictly fewer programs and cut p95 TPOT / decode stall under the long
 tail — the bench prints an explicit PASS/FAIL verdict line.
 """
@@ -127,7 +129,9 @@ def run_lockstep(eng, reqs, *, max_batch=4):
             r.tpot_s = decode_s / max(len(r.out_tokens) - 1, 1)
             r.ttft_s = serve_start + r.ttft_s - r.arrival_s
         done += batch
-    return _metrics(done, time.perf_counter() - t0, tracks_gaps=False)
+    m = _metrics(done, time.perf_counter() - t0, tracks_gaps=False)
+    m["kv_bytes_peak"] = eng.kv_device_bytes(max_batch)
+    return m
 
 
 def run_bucketed(eng, reqs):
@@ -138,6 +142,7 @@ def run_bucketed(eng, reqs):
     m["compiles"] = (eng.prefill_cache.compile_count()
                      + len(eng._decode_fns))
     m["compile_cache"] = eng.prefill_cache.stats()
+    m["kv_bytes_peak"] = eng.kv_device_bytes()
     return m
 
 
@@ -150,6 +155,7 @@ def run_chunked(eng, reqs):
                      + len(eng._decode_fns))
     m["compile_cache"] = eng.chunk_cache.stats()
     m["engine_stats"] = dict(eng.stats)
+    m["kv_bytes_peak"] = eng.kv_device_bytes()
     return m
 
 
@@ -216,6 +222,10 @@ def run(report):
         report(f"serving/{name}_stall_max_ms", None,
                f"{m['stall_max_ms']:.0f}")
         report(f"serving/{name}_compiles", None, f"{m['compiles']}")
+        # peak device KV bytes per config: BENCH_*.json tracks the memory
+        # trajectory across PRs, not just latency/throughput
+        report(f"serving/{name}_kv_bytes_peak", None,
+               f"{m['kv_bytes_peak']}")
     ok, verdict = _verdict(res)
     report("serving/longtail_verdict", None, "pass" if ok else "fail")
     speed = (res["chunked"]["tok_per_s"]

@@ -13,7 +13,11 @@ Gated verdicts:
   baseline *and* cuts p95 TPOT;
 * ``prefix/reuse_verdict``     — on the Zipf shared-prefix trace the
   radix-trie prompt cache admits a fully cached prompt faster than one
-  uncached chunk prefills, with >= 2x aggregate TTFT improvement.
+  uncached chunk prefills, with >= 2x aggregate TTFT improvement;
+* ``paged/admission_verdict``  — at an equal KV byte budget the paged
+  block-pool engine admits >= 1.5x the concurrent requests of the dense
+  engine on a mixed-length Zipf trace, p95 TTFT no worse (within the
+  CPU dispatch-noise guard).
 
 The JSON artifact carries every reported benchmark row plus the verdict
 map, so a red gate links straight to the number that moved.
@@ -28,7 +32,7 @@ import time
 
 # every row name ending in ``_verdict`` gates the job
 SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving",
-          "benchmarks.bench_prefix")
+          "benchmarks.bench_prefix", "benchmarks.bench_paged")
 
 
 def main() -> None:

@@ -44,19 +44,26 @@ def decode_one(
     cache: dict,
     *,
     active: Optional[jnp.ndarray] = None,  # (B,) live-slot mask
+    paged_depth: Optional[int] = None,  # static depth of a paged cache
 ) -> tuple[jnp.ndarray, dict]:
     """One greedy decode step.  Returns (next_token (B, 1), new cache).
 
     With ``active`` (continuous batching), retired / empty slots don't
     advance: their cache is held fixed and their token freezes, so a slot
     can idle between retirement and the next admission without corrupting
-    its neighbours' step count.
+    its neighbours' step count.  A *paged* cache (``"pool"`` key) gates
+    its own advances in-step — the block pool is shared across slots, so
+    there is no per-slot pytree to select back to.
     """
-    logits, new_cache = tf.decode_step(params, cfg, token, cache)
+    paged = "pool" in cache
+    logits, new_cache = tf.decode_step(
+        params, cfg, token, cache,
+        active=active if paged else None, paged_depth=paged_depth)
     nxt = jnp.argmax(logits, -1)[:, None].astype(token.dtype)
     if active is not None:
         nxt = jnp.where(active[:, None], nxt, token)
-        new_cache = tf.select_cache_slots(active, new_cache, cache)
+        if not paged:
+            new_cache = tf.select_cache_slots(active, new_cache, cache)
     return nxt, new_cache
 
 
@@ -90,6 +97,7 @@ def decode_chunk(
     steps: int,
     *,
     active: Optional[jnp.ndarray] = None,
+    paged_depth: Optional[int] = None,
 ) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
     """``steps`` greedy steps *after* ``token``.  Returns (last (B, 1), cache,
     new tokens (B, steps)).  Unlike ``greedy_decode`` the emitted tokens
@@ -98,7 +106,8 @@ def decode_chunk(
 
     def step(carry, _):
         tok, cache = carry
-        nxt, cache = decode_one(params, cfg, tok, cache, active=active)
+        nxt, cache = decode_one(params, cfg, tok, cache, active=active,
+                                paged_depth=paged_depth)
         return (nxt, cache), nxt[:, 0]
 
     (last, cache), toks = jax.lax.scan(

@@ -312,6 +312,44 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention (block-table KV pool)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # (B, H, hd) single query token
+    k_pool: jnp.ndarray,  # (N, block_size, KV, hd) shared block pool
+    v_pool: jnp.ndarray,
+    mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head slot validity
+    table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+) -> jnp.ndarray:
+    """Decode attention over a paged KV cache (``serving/kv_pool.py``).
+
+    The Pallas kernel scalar-prefetches the block table and gathers key
+    tiles straight from the pool — no dense per-sequence copy of the
+    cache exists on the TPU path.  The fallback gathers the block-table
+    view (``ref.gather_paged``, an exact bitwise copy of the pooled rows)
+    and runs the same direct decode attention as the dense path — which
+    is what makes paged serving bit-identical to dense serving on the
+    jnp dispatch (see ``attention.decode_attention_step_paged``).
+
+    Dead rows — null blocks behind ragged tables, tails beyond a slot's
+    cursor, stale rows of a reallocated block — must be masked False in
+    ``mask_pool``; the mask is the single source of validity.
+    """
+    if use_pallas():
+        from repro.kernels import paged_attention as pk
+
+        return pk.paged_decode_attention_pallas(
+            q, k_pool, v_pool, mask_pool, table,
+            interpret=_pallas_interpret(),
+        )
+    from repro.kernels import ref
+
+    return ref.paged_decode_attention(q, k_pool, v_pool, mask_pool, table)
+
+
+# ---------------------------------------------------------------------------
 # lookahead importance scores (the paper's hot spot)
 # ---------------------------------------------------------------------------
 

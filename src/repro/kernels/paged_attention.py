@@ -1,0 +1,120 @@
+"""Pallas TPU paged flash-decode: one query token against a block-table KV
+cache (the paged-KV companion of ``decode_attention.py``).
+
+The cache is not a contiguous (B, Sk, KV, hd) array but a shared block
+pool — ``k_pool``/``v_pool`` of shape (num_blocks, block_size, KV, hd)
+plus a per-sequence **block table** (B, nb) of physical block ids
+(``serving/kv_pool.py``).  The table rides the grid as a *scalar-prefetch*
+operand: Pallas reads it before the kernel body runs, so each grid step's
+``BlockSpec`` index map can point the K/V/mask DMA at
+``table[b, block_index]`` directly — key tiles are gathered from HBM by
+the pipeline itself, and no dense per-sequence copy of the cache ever
+materializes.
+
+Ragged tails need no special casing: unallocated table entries hold the
+pool's null block (id 0), whose validity mask is permanently all-False,
+so a fully-masked tile contributes exact zeros to the online-softmax
+recurrence (``m`` carries, ``corr = exp(0) = 1``).  The mask is per kv
+head — eviction keeps different token positions per head — which the
+dense Pallas decode kernel does not support; here the mask tile is
+block-indexed like K/V, so per-head validity is free.
+
+grid = (B, H, nb), key-block axis innermost with (m, l, acc) scratch
+carry — the same flash-decode recurrence as ``decode_attention.py``, with
+the key stream indirected through the table.
+
+Oracle: ``ref.paged_decode_attention``.  jnp gather fallback in
+``ops.paged_decode_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, nb, scale):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)  # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_size, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    ok = mask_ref[0, :, 0]  # (block_size,) — this kv head's validity
+    s = (k @ q) * scale
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_scr[0] * corr + p.sum()
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[0] = m_new
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,  # (B, H, hd)
+    k_pool: jnp.ndarray,  # (N, block_size, KV, hd) shared block pool
+    v_pool: jnp.ndarray,
+    mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head slot validity
+    table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Flash decode over a paged cache.  Rows the caller considers dead
+    (beyond the logical depth, or holding a stale previous owner's data)
+    must be masked False in ``mask_pool`` — the mask is the single source
+    of validity, exactly as in the dense cache layout."""
+    B, H, hd = q.shape
+    N, bs, KV, _ = k_pool.shape
+    nb = table.shape[1]
+    group = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, nb=nb, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, ib, tbl: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
+                                                         h // g, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
+                                                         h // g, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
+                                                         h // g)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, ib, tbl: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q, k_pool, v_pool, mask_pool)

@@ -236,3 +236,42 @@ def ssd_scan(
     )
     final, ys = jax.lax.scan(step, initial_state, xs)
     return jnp.moveaxis(ys, 0, 1), final
+
+
+def gather_paged(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Flatten a block-table view of a paged pool into the dense cache
+    layout: pool (N, bs, ...) + table (B, nb) -> (B, nb*bs, ...), where
+    logical row ``c`` of sequence ``b`` is ``pool[table[b, c // bs],
+    c % bs]``.  Gathers are exact — the dense view is a bitwise copy of
+    the pooled rows (the paged-vs-dense equivalence lemma)."""
+    B, nb = table.shape
+    g = pool[table]  # (B, nb, bs, ...)
+    return g.reshape((B, nb * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # (B, H, hd) single query token
+    k_pool: jnp.ndarray,  # (N, block_size, KV, hd) shared block pool
+    v_pool: jnp.ndarray,
+    mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head validity
+    table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+) -> jnp.ndarray:
+    """Dense oracle for the paged decode kernel: materialize the
+    block-table gather and run the naive masked decode attention over it.
+    Dead rows (null blocks, ragged tails, stale previous owners) must be
+    masked False in ``mask_pool`` — the mask is the sole validity source,
+    as in the dense cache layout.
+
+    A sequence/head with *no* valid key anywhere (an all-null table — a
+    slot between requests) is defined to be exact zeros, matching the
+    flash kernels' ``l -> max(l, eps)`` convention rather than the naive
+    softmax's uniform-over-garbage limit."""
+    mask = gather_paged(mask_pool, table)  # (B, S, KV)
+    out = decode_attention(
+        q, gather_paged(k_pool, table), gather_paged(v_pool, table),
+        kv_mask=mask,
+    )
+    B, H, _ = q.shape
+    KV = mask_pool.shape[2]
+    alive = jnp.repeat(mask.any(axis=1), H // KV, axis=1)  # (B, H)
+    return jnp.where(alive[..., None], out, 0.0).astype(out.dtype)

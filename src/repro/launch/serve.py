@@ -22,8 +22,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import policies
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import (BucketedEngine, ContinuousEngine, PrefixCache,
-                           Request, ServingEngine)
+from repro.serving import (BucketedEngine, ContinuousEngine, KVBlockPool,
+                           PrefixCache, Request, ServingEngine)
 
 
 def main():
@@ -49,6 +49,14 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of a shared system-prompt prefix planted "
                          "in every request (rounded down to whole chunks)")
+    ap.add_argument("--kv-pool-mb", type=float, default=0,
+                    help="paged KV memory: decode caches live in a shared "
+                         "block pool of this many MB, admission is gated "
+                         "by free blocks, and eviction frees real device "
+                         "memory (continuous engine; 0 = dense slot "
+                         "caches, the old behavior)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="rows per KV pool block (with --kv-pool-mb)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -71,6 +79,10 @@ def main():
     if args.shared_prefix and not args.continuous:
         print("note: --shared-prefix shapes --continuous traffic only; "
               "ignoring it")
+    if args.kv_pool_mb and not streamable:
+        print("note: --kv-pool-mb requires the chunked continuous engine "
+              "(--continuous with a streamable policy); ignoring it")
+        args.kv_pool_mb = 0
     if args.continuous:
         if args.policy in policies.MULTI_PASS or args.policy == "full":
             # draft-based baselines and 'full' cannot stream prefill chunks;
@@ -83,18 +95,25 @@ def main():
                     lkv_params=lkv, num_slots=args.slots,
                     max_new_tokens=args.max_new, eos_id=-1)
         else:
+            kv_pool = None
+            if args.kv_pool_mb:
+                kv_pool = KVBlockPool(cfg, block_size=args.kv_block_size,
+                                      pool_mb=args.kv_pool_mb)
             prefix_cache = None
             if args.prefix_cache_mb:
+                # with a pool, cached prefixes pin pool blocks (one
+                # physical copy shared with decode) instead of owning a
+                # second device-resident copy
                 prefix_cache = PrefixCache(
                     chunk=args.chunk,
-                    max_bytes=args.prefix_cache_mb << 20)
+                    max_bytes=args.prefix_cache_mb << 20, pool=kv_pool)
             eng = ContinuousEngine(
                 params, cfg, policy=args.policy,
                 evict=EvictionConfig(budget=args.budget, draft_len=8),
                 lkv_params=lkv, num_slots=args.slots, chunk=args.chunk,
                 max_context=max(args.n_in, args.chunk),
                 max_new_tokens=args.max_new, eos_id=-1,
-                prefix_cache=prefix_cache)
+                prefix_cache=prefix_cache, kv_pool=kv_pool)
         shared = (args.shared_prefix // args.chunk) * args.chunk
         system = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
         lens = rng.integers(args.n_in // 2, args.n_in + 1, args.requests)
@@ -114,6 +133,15 @@ def main():
                   f"{p['cached_tokens']}/{p['prompt_tokens']} prompt tokens "
                   f"served from shared prefixes, "
                   f"{eng.prefix_cache.stats()['bytes'] / 1e6:.2f} MB resident")
+        if getattr(eng, "pool", None) is not None:
+            s = eng.stats["kv_pool"]
+            print(f"kv pool: {s['blocks_total']} x {s['block_size']}-row "
+                  f"blocks ({s['bytes_total'] / 1e6:.2f} MB), high water "
+                  f"{s['high_water_blocks']} blocks, peak concurrency "
+                  f"{eng.stats['max_concurrency']}, "
+                  f"{eng.stats['preemptions']} preemptions, "
+                  f"{s['blocks_pinned_prefix']} blocks pinned by the "
+                  f"prefix cache")
     else:
         with warnings.catch_warnings():  # explicit lockstep-baseline request
             warnings.simplefilter("ignore", DeprecationWarning)

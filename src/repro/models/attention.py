@@ -248,6 +248,88 @@ def decode_attention_step(
     return out, new_cache
 
 
+def decode_attention_step_paged(
+    p: dict,
+    a: AttentionConfig,
+    h1: jnp.ndarray,  # (B, 1, D) current token hidden
+    inp: AttnInputs,
+    *,
+    table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+    depth: int,  # static dense-equivalent cache depth (capacity + margin)
+    active: Optional[jnp.ndarray] = None,  # (B,) live-slot mask
+    window=None,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step against the *paged* cache (``serving/kv_pool.py``).
+
+    ``inp.cache`` holds this layer's slice of the shared block pool
+    ({k, v: (N, bs, KV, hd); pos, mask: (N, bs, KV)}); a slot's logical
+    cache row ``c`` lives at ``(table[b, c // bs], c % bs)``.  The step
+
+    1. appends the new token's K/V at the slot's cursor row — a scatter
+       into the slot's own block.  Because the pool is shared, a write
+       from a retired / empty slot cannot be reverted with a per-slot
+       select the way the dense path does: writes are gated *here* —
+       inactive or full slots route their scatter to the null block (id
+       0), whose mask stays False (the routed mask value is exactly
+       ``False``), so zombie decodes never corrupt a neighbour's blocks;
+    2. gathers the block-table view back to the dense layout, slices it
+       to the static ``depth`` the dense engine uses, and runs the *same*
+       ``ops.decode_attention`` call as ``decode_attention_step``.
+
+    Step 2 is the bit-exactness contract: allocated rows are bitwise the
+    rows the dense cache would hold, dead rows (null-backed gaps and
+    tails) are masked False exactly where the dense mask is False, and a
+    masked row contributes an exact zero to the softmax regardless of its
+    payload — so paged serving emits bit-identical tokens to dense
+    serving on every dispatch path.  (``ops.paged_decode_attention``'s
+    Pallas kernel reduces per block tile instead — the TPU hot path,
+    parity within fp tolerance — and is exercised by the kernel suite and
+    ``benchmarks/bench_paged.py``.)
+    """
+    pool = inp.cache  # this layer's pool slice
+    B = h1.shape[0]
+    KV = a.num_kv_heads
+    bs = pool["k"].shape[1]
+    nb = table.shape[1]
+    assert depth <= nb * bs, "block table shallower than the logical cache"
+    q, k_new, v_new = qkv(p, a, h1, inp)
+    cursor = inp.cache_cursor  # (B,) per-slot append cursors
+    new_pos = jnp.broadcast_to(inp.positions[:, :, None], (B, 1, KV))
+
+    # -- append (null-routed for inactive / full slots) --
+    write_ok = cursor < depth  # full caches stop appending (as dense)
+    if active is not None:
+        write_ok &= active
+    jb = jnp.clip(cursor // bs, 0, nb - 1)
+    off = jnp.clip(cursor - jb * bs, 0, bs - 1)
+    pb = jnp.take_along_axis(table, jb[:, None], axis=1)[:, 0]
+    # a live slot whose append block is missing (table entry 0 — the
+    # engine's ensure step should have grown it) must not mark a null-
+    # block row valid: that would hand a phantom zero-payload key to
+    # every slot whose gaps/tails read that row
+    write_ok &= pb != 0
+    pb = jnp.where(write_ok, pb, 0)
+    pk = pool["k"].at[pb, off].set(k_new[:, 0].astype(pool["k"].dtype))
+    pv = pool["v"].at[pb, off].set(v_new[:, 0].astype(pool["v"].dtype))
+    ppos = pool["pos"].at[pb, off].set(new_pos[:, 0])
+    pmask = pool["mask"].at[pb, off].set(
+        jnp.broadcast_to(write_ok[:, None], (B, KV)))
+
+    # -- gather the dense view and attend exactly as the dense step --
+    def view(x):
+        return x[table].reshape((B, nb * bs) + x.shape[2:])[:, :depth]
+
+    k, v = view(pk), view(pv)
+    pos, mask = view(ppos), view(pmask)
+    att_mask = mask
+    if window is not None:
+        att_mask = mask & ((new_pos[:, :1] - pos) < window)
+    out = ops.decode_attention(q[:, 0], k, v, kv_mask=att_mask)
+    out = out.reshape(B, 1, a.q_dim)
+    out = linear(out, p["wo"])
+    return out, {"k": pk, "v": pv, "pos": ppos, "mask": pmask}
+
+
 def cross_attention(
     p: dict,
     a: AttentionConfig,

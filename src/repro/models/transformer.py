@@ -1084,9 +1084,23 @@ def decode_step(
     *,
     mrope_positions: Optional[jnp.ndarray] = None,  # (3, B, 1)
     mesh=None,  # enables shard_map'd frozen-cache attention (split cache)
+    active: Optional[jnp.ndarray] = None,  # (B,) live slots (paged cache)
+    paged_depth: Optional[int] = None,  # static dense-equivalent depth
 ) -> tuple[jnp.ndarray, dict]:
-    """One decode step.  Returns (logits (B, V) f32, updated cache)."""
+    """One decode step.  Returns (logits (B, V) f32, updated cache).
+
+    A *paged* cache (``"pool"`` key — see serving/kv_pool.py) carries the
+    shared per-layer block-pool arrays plus a per-slot block table under
+    ``cache["attn"]["table"]``.  Because the pool is shared across slots,
+    retired slots cannot be rolled back with ``select_cache_slots`` the
+    way dense serving does — ``active`` gates the append scatter and the
+    cursor / position advance in-step instead.  ``paged_depth`` is the
+    static logical cache depth (the dense engine's capacity + margin):
+    the gathered view is sliced to it so the attention computation is
+    shape- and bit-identical to the dense path.
+    """
     a = cfg.attn
+    paged = "pool" in cache
     h = embed(params, cfg, token)
     B = h.shape[0]
     positions = cache["next_pos"]  # (B, 1)
@@ -1101,7 +1115,10 @@ def decode_step(
     xs: dict = {"p": params["layers"]}
     if patterned:
         xs["flag"] = jnp.asarray(flags)
-    if cfg.uses_attention and "attn" in cache:
+    if paged:
+        assert paged_depth is not None, "paged decode needs its static depth"
+        xs["attn_cache"] = cache["pool"]  # per-layer pool slices (L leading)
+    elif cfg.uses_attention and "attn" in cache:
         xs["attn_cache"] = cache["attn"]
     if cfg.uses_ssm:
         xs["ssm_cache"] = cache["ssm"]
@@ -1129,13 +1146,19 @@ def decode_step(
             if cfg.uses_attention and "attn_cache" in x:
                 inp = inp_base._replace(cache=x["attn_cache"])
                 win = layer_window(a, flag)
-                if "hot_k" in x["attn_cache"]:
-                    step_fn = attn_mod.decode_attention_step_split
-                elif "score" in x["attn_cache"]:
-                    step_fn = attn_mod.decode_attention_step_evicting
+                if paged:
+                    a_out, new_c = attn_mod.decode_attention_step_paged(
+                        lp["attn"], a, u, inp, window=win,
+                        table=cache["attn"]["table"], depth=paged_depth,
+                        active=active)
                 else:
-                    step_fn = attn_mod.decode_attention_step
-                a_out, new_c = step_fn(lp["attn"], a, u, inp, window=win)
+                    if "hot_k" in x["attn_cache"]:
+                        step_fn = attn_mod.decode_attention_step_split
+                    elif "score" in x["attn_cache"]:
+                        step_fn = attn_mod.decode_attention_step_evicting
+                    else:
+                        step_fn = attn_mod.decode_attention_step
+                    a_out, new_c = step_fn(lp["attn"], a, u, inp, window=win)
                 delta = delta + a_out
                 ys["attn_cache"] = new_c
             if cfg.uses_ssm:
@@ -1160,6 +1183,19 @@ def decode_step(
     logits = unembed(params, cfg, h[:, 0])
 
     new_cache = dict(cache)
+    if paged:
+        # pool writes were already active-gated in-step (null-routed);
+        # the per-slot cursor / position advance is gated here for the
+        # same reason — no post-hoc select over the shared pool exists
+        new_cache["pool"] = ys["attn_cache"]
+        adv_c = jnp.minimum(cursor + 1, paged_depth)
+        adv_p = positions + 1
+        if active is not None:
+            adv_c = jnp.where(active, adv_c, cursor)
+            adv_p = jnp.where(active[:, None], adv_p, positions)
+        new_cache["cursor"] = adv_c
+        new_cache["next_pos"] = adv_p
+        return logits, new_cache
     if "attn_cache" in ys:
         new_cache["attn"] = ys["attn_cache"]
         if "hot_k" in cache["attn"]:

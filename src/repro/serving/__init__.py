@@ -1,15 +1,19 @@
 """Serving subsystem: chunked continuous batching (+ deprecated baselines).
 
     scheduler.py — request state machine, FCFS queue, fixed decode slots,
-                   the token-budget step planner (``plan_step``)
+                   the token-budget step planner (``plan_step``), paged-KV
+                   admission gate / preempt-to-queue
     batching.py  — ChunkCompileCache (keyed (chunk, batch, policy)) and the
                    deprecated bucket utilities
+    kv_pool.py   — KVBlockPool: paged decode-KV memory (per-layer device
+                   block pool, free-list allocator, refcounted blocks)
     prefix_cache.py — radix-trie prompt cache: refcounted chunk-boundary
-                   (KV, ScoreState) snapshots shared across requests
+                   (KV, ScoreState) snapshots shared across requests,
+                   optionally pinned as block runs in the KV pool
     engine.py    — ContinuousEngine (chunked prefill interleaved with
-                   decode, optional prefix-aware KV reuse); deprecated
-                   ServingEngine (lockstep) and BucketedEngine
-                   (pad-to-bucket prefill)
+                   decode, optional prefix-aware KV reuse and paged KV
+                   memory); deprecated ServingEngine (lockstep) and
+                   BucketedEngine (pad-to-bucket prefill)
 """
 
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
@@ -17,13 +21,14 @@ from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     bucket_for, pad_to_bucket)
 from repro.serving.engine import (BucketedEngine, ContinuousEngine, Request,
                                   RequestState, ServingEngine, cache_bytes)
+from repro.serving.kv_pool import KVBlockPool
 from repro.serving.prefix_cache import PrefixCache, PrefixEntry
 from repro.serving.scheduler import SlotScheduler, plan_step
 
 __all__ = [
     "BucketedEngine", "ChunkCompileCache", "ContinuousEngine",
-    "DEFAULT_BUCKETS", "PrefillCompileCache", "PrefixCache", "PrefixEntry",
-    "Request", "RequestState", "ServingEngine", "SlotScheduler",
-    "batch_bucket", "bucket_for", "cache_bytes", "pad_to_bucket",
-    "plan_step",
+    "DEFAULT_BUCKETS", "KVBlockPool", "PrefillCompileCache", "PrefixCache",
+    "PrefixEntry", "Request", "RequestState", "ServingEngine",
+    "SlotScheduler", "batch_bucket", "bucket_for", "cache_bytes",
+    "pad_to_bucket", "plan_step",
 ]

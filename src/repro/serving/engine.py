@@ -52,6 +52,7 @@ from repro.models import transformer as tf
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     PrefillCompileCache, _batch_bucket,
                                     _bucket_for, _pad_to_bucket)
+from repro.serving.kv_pool import KVBlockPool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (Request, RequestState, SlotScheduler,
                                      plan_step)
@@ -166,6 +167,16 @@ class ServingEngine:
         cap = self.evict.budget + self.decode_margin
         return cache_bytes(self.cfg, cap, n_in)
 
+    def kv_device_bytes(self, batch: int = 1) -> int:
+        """K+V bytes of one served batch's decode cache (the lockstep
+        engine holds no persistent slot cache between batches)."""
+        a = self.cfg.attn
+        if a is None:
+            return 0
+        per_row = 2 * self.cfg.num_layers * a.kv_dim \
+            * jnp.dtype(self.cfg.dtype).itemsize
+        return batch * (self.evict.budget + self.decode_margin) * per_row
+
 
 class _InflightPrefill:
     """Host-side cursor of the one streaming prefill in flight.  ``tip``
@@ -233,6 +244,12 @@ class _SlotDecodeMixin:
             if finished or remaining[slot] <= 0:
                 sched.retire(r, now=now)
                 active[slot] = False
+                self._release_slot(slot)
+
+    def _release_slot(self, slot: int) -> None:
+        """Retirement hook: the paged engine returns the slot's KV blocks
+        to the pool here — the memory half of retiring (dense slot caches
+        have nothing to free)."""
 
 
 class ContinuousEngine(_SlotDecodeMixin):
@@ -287,6 +304,8 @@ class ContinuousEngine(_SlotDecodeMixin):
         decode_evict: bool = False,
         decode_chunk: int = 8,
         prefix_cache: Optional[PrefixCache] = None,
+        kv_pool: Optional[KVBlockPool] = None,  # paged decode-KV memory
+        reserve_appends: bool = True,  # guarantee admitted requests' growth
         capture_admission: bool = False,  # stash mask/pos on each Request
     ):
         assert tf.chunkable(cfg), \
@@ -332,6 +351,47 @@ class ContinuousEngine(_SlotDecodeMixin):
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
             prefix_cache.bind(chunk=chunk, policy=policy, model=params)
+        # paged KV memory (serving/kv_pool.py): decode caches live in a
+        # shared block pool instead of dense per-slot buffers — eviction
+        # frees real device blocks, and admission is gated by free-block
+        # count (scheduler admission_gate) rather than slot count alone.
+        self.pool = kv_pool
+        self._paged_depth = self.capacity + self.decode_margin
+        if kv_pool is not None:
+            assert not decode_evict, \
+                "paged KV does not support decoding-stage eviction (its " \
+                "fixed-capacity cache never grows, so paging buys nothing)"
+            self._nb_max = kv_pool.blocks_for(self._paged_depth)
+            assert kv_pool.usable_blocks >= self._nb_max + 1, \
+                "pool cannot hold even one request's worst-case cache; " \
+                "raise --kv-pool-mb or shrink --kv-block-size"
+            # host mirrors of the device block tables / cursors — the
+            # allocator needs them synchronously, and the advance rule is
+            # deterministic (active slots move `steps` per decode chunk),
+            # so mirrors never drift from the device state they shadow
+            self._table_h = np.zeros((num_slots, self._nb_max), np.int32)
+            self._table_dev = jnp.asarray(self._table_h.copy())  # np copy: the mirror mutates while transfers stage lazily
+            self._cursor_h = np.zeros(num_slots, np.int32)
+            self._npos_h = np.zeros(num_slots, np.int32)
+            self._slot_blocks: dict[int, list[int]] = {
+                s: [] for s in range(num_slots)}
+            self._admit_seq = np.full(num_slots, -1, np.int64)
+            self._admit_counter = 0
+            # admission policy: with ``reserve_appends`` (default) every
+            # admission reserves its worst-case decode-append blocks, so a
+            # running request can never be starved by a later one — the
+            # vLLM-style watermark.  Without it admission is optimistic
+            # (more concurrency when generations end early) and the
+            # preempt-to-queue path is the safety valve.
+            self.reserve_appends = reserve_appends
+            self._slot_reserved = np.zeros(num_slots, np.int64)
+            bs = kv_pool.block_size
+            # block indices only decode appends can touch: [capacity, depth)
+            self._append_jbs = list(range(
+                self.capacity // bs, (self._paged_depth - 1) // bs + 1))
+            if prefix_cache is not None and prefix_cache.pool is not None:
+                assert prefix_cache.pool is kv_pool, \
+                    "prefix cache bound to a different block pool"
         self.capture_admission = capture_admission
 
     # -- compile-cache bodies ------------------------------------------------
@@ -374,7 +434,36 @@ class ContinuousEngine(_SlotDecodeMixin):
         return cap
 
     def cache_bytes(self, n_in: int) -> dict:
-        return cache_bytes(self.cfg, self.capacity + self.decode_margin, n_in)
+        """Analytic full-vs-evicted footprint — plus, when serving paged,
+        the *actual* pool utilization (blocks used/free, prefix-pinned
+        bytes, high-water mark) instead of dense-capacity theory:
+        ``evicted`` becomes the measured peak per-request block footprint
+        once traffic has been served."""
+        out = cache_bytes(self.cfg, self.capacity + self.decode_margin, n_in)
+        if self.pool is not None:
+            s = self.pool.stats()
+            out["pool"] = s
+            peak = self.stats.get("max_concurrency", 0)
+            if peak:
+                # measured peak per-request footprint (prefix-cache pins
+                # are shared capital, not per-request cost)
+                decode_hw = max(
+                    s["bytes_high_water"] - s["bytes_pinned_prefix"],
+                    s["block_bytes"])
+                out["evicted"] = decode_hw // peak
+                out["ratio"] = out["full"] / max(out["evicted"], 1)
+        return out
+
+    def kv_device_bytes(self) -> int:
+        """Device bytes the decode KV actually reserves: the whole block
+        pool when paged, the dense ``num_slots × (capacity + margin)``
+        slot cache otherwise (K+V payload, the paper's headline unit)."""
+        if self.pool is not None:
+            return self.pool.stats()["bytes_total"]
+        a = self.cfg.attn
+        per_row = 2 * self.cfg.num_layers * a.kv_dim \
+            * jnp.dtype(self.cfg.dtype).itemsize
+        return self.num_slots * (self.capacity + self.decode_margin) * per_row
 
     def warmup(self, prompt_lens=(), batch_sizes=(1,)) -> None:
         """Pre-instantiate the (chunk, batch, policy) compile-cache entries.
@@ -396,18 +485,25 @@ class ContinuousEngine(_SlotDecodeMixin):
         slot's decode ever waits longer than one step behind a prompt of
         *any* length.
         """
-        sched = SlotScheduler(self.num_slots, bucket_for=lambda n: self.chunk,
-                              max_prefill_batch=1)
+        sched = SlotScheduler(
+            self.num_slots, bucket_for=lambda n: self.chunk,
+            max_prefill_batch=1,
+            admission_gate=self._admission_gate if self.pool is not None
+            else None)
         for r in requests:
             assert r.max_new_tokens <= self.max_new_tokens, \
                 "request exceeds the engine's max_new_tokens cache margin"
             sched.submit(r)
         t0 = time.perf_counter()
-        live = tf.init_decode_cache(self.cfg, self.num_slots,
-                                    self.capacity + self.decode_margin,
-                                    per_slot_cursor=True)
-        if self.decode_evict:
-            live = tf.add_decode_eviction_scores(live)
+        if self.pool is not None:
+            sched.bind_pool(self.pool)
+            live = None  # paged state: block tables + pool, no dense cache
+        else:
+            live = tf.init_decode_cache(self.cfg, self.num_slots,
+                                        self.capacity + self.decode_margin,
+                                        per_slot_cursor=True)
+            if self.decode_evict:
+                live = tf.add_decode_eviction_scores(live)
         tok = jnp.zeros((self.num_slots, 1), jnp.int32)
         active = np.zeros(self.num_slots, bool)
         remaining = np.zeros(self.num_slots, np.int64)
@@ -418,12 +514,15 @@ class ContinuousEngine(_SlotDecodeMixin):
         static_window = tf.is_global_flags(self.cfg) is None
         self.stats = {"prefill_chunks": 0, "decode_chunks": 0,
                       "max_prefill_between_decode": 0,
+                      "max_concurrency": 0,
                       "score_path": ("pallas-fused"
                                      if ops.use_pallas() and static_window
                                      else "jnp-fallback")}
         if self.prefix_cache is not None:
             self.stats.update(prefix_hits=0, prefix_misses=0,
                               prefix_tokens_skipped=0)
+        if self.pool is not None:
+            self.stats.update(preemptions=0, admission_blocked=0)
 
         try:
             self._run_loop(sched, tok, live, active, remaining, last_emit,
@@ -432,6 +531,12 @@ class ContinuousEngine(_SlotDecodeMixin):
             if self.prefix_cache is not None:
                 self.stats["prefix_cache"] = self.prefix_cache.stats()
                 self.stats["prefix"] = sched.prefix_stats()
+            if self.pool is not None:
+                # a failed run must not leak blocks into the next one (a
+                # clean run has already freed every slot at retirement)
+                for s in range(self.num_slots):
+                    self._free_slot_blocks(s)
+                self.stats["kv_pool"] = sched.pool_stats()
         return sched.finished
 
     def _run_loop(self, sched, tok, live, active, remaining, last_emit,
@@ -463,19 +568,57 @@ class ContinuousEngine(_SlotDecodeMixin):
                                                     remaining, last_emit, t0)
                             pf = None
                             break
+                self.stats["max_concurrency"] = max(
+                    self.stats["max_concurrency"], len(sched.running))
                 if active.any():
                     self.stats["max_prefill_between_decode"] = max(
                         self.stats["max_prefill_between_decode"], since_decode)
                     since_decode = 0
                     steps = self._pick_chunk(remaining, active)
-                    fn = self._decode_fn(steps)
-                    tok, live, toks = fn(self.params, tok, live,
-                                         jnp.asarray(active))
+                    if self.pool is not None:
+                        # grow every live slot's append blocks before the
+                        # chunk runs — a missing block would null-route the
+                        # appends; preempts the latest admission when dry
+                        self._ensure_append_blocks(sched, active, remaining,
+                                                   last_emit, steps)
+                        if not active.any():
+                            continue  # every live slot was preempted
+                        dispatched = active.copy()
+                        fn = self._decode_fn_paged(steps)
+                        # snapshot the host mirrors with *numpy* copies
+                        # before handing them to jax: dispatch is async
+                        # and the host->device staging of an argument can
+                        # happen after this call returns, so a buffer we
+                        # mutate in place below (cursor/npos advance,
+                        # retirement bookkeeping) would race the device
+                        # read — jnp.array/asarray both defer the read
+                        tok, ptree, toks = fn(
+                            self.params, tok, self._table_dev,
+                            jnp.asarray(self._cursor_h.copy()),
+                            jnp.asarray(self._npos_h[:, None].copy()),
+                            self.pool.tree(), jnp.asarray(active.copy()))
+                        self.pool.set_tree(ptree)
+                        # mirror the device advance rule exactly: slots
+                        # active at dispatch move `steps`, cursors clamp
+                        self._cursor_h[dispatched] = np.minimum(
+                            self._cursor_h[dispatched] + steps,
+                            self._paged_depth)
+                        self._npos_h[dispatched] += steps
+                    else:
+                        fn = self._decode_fn(steps)
+                        tok, live, toks = fn(self.params, tok, live,
+                                             jnp.asarray(active))
                     self.stats["decode_chunks"] += 1
                     self._collect(np.asarray(toks), steps, sched, active,
                                   remaining, last_emit, t0)
                 elif pf is None:
-                    if sched.has_arrived(time.perf_counter() - t0):
+                    now2 = time.perf_counter() - t0
+                    if sched.has_arrived(now2):
+                        if self.pool is not None and not sched.running:
+                            # nothing can retire to free blocks: reclaim
+                            # prefix-cache pins or fail loudly instead of
+                            # spinning on a gated queue head
+                            self._reclaim_for_head(sched)
                         continue  # a request is admissible right now
                     nxt = sched.next_arrival()
                     if nxt is None:
@@ -554,22 +697,254 @@ class ContinuousEngine(_SlotDecodeMixin):
                 "pos": np.asarray(cache["attn"]["pos"]),
             }
         pf.logits.block_until_ready()
+        if self.pool is not None:
+            slot = self._paged_place(sched, r, cache)
+            if slot is None:
+                # the gate's headroom was eaten by running slots' appends
+                # during this prefill: back to the queue head, re-prefill
+                # when blocks free (FCFS order and served tokens unchanged
+                # — greedy decode is deterministic)
+                self.stats["admission_blocked"] += 1
+                sched.push_front(r)
+                return tok, live
+        else:
+            slot = sched.place(r)
+            live = self._insert_fn(live, cache, slot)
         now = time.perf_counter() - t0
         first = int(jnp.argmax(pf.logits[0]))
-        slot = sched.place(r)
-        live = self._insert_fn(live, cache, slot)
         tok = tok.at[slot, 0].set(first)
         r.out_tokens = [first]
-        r.first_token_s = now
-        r.ttft_s = now - r.enqueue_s
+        if r.first_token_s is None:
+            # a re-admitted (preempted) request keeps its original stamp:
+            # the client received its first token then, and the replayed
+            # tokens are bit-identical — the preemption shows up in
+            # max_gap_s / tpot_s, where the stall honestly belongs
+            r.first_token_s = now
+            r.ttft_s = now - r.enqueue_s
+        if r.preempt_emit_s is not None:
+            # the client-visible stall spans preemption to this re-emit
+            r.max_gap_s = max(r.max_gap_s, now - r.preempt_emit_s)
+            r.preempt_emit_s = None
         last_emit[slot] = now
         if first == self.eos_id or r.max_new_tokens <= 1:
             sched.retire(r, now=now)
             active[slot] = False
+            self._release_slot(slot)
         else:
             active[slot] = True
             remaining[slot] = r.max_new_tokens - 1
         return tok, live
+
+    # -- paged-KV internals (serving/kv_pool.py) --------------------------
+    #
+    # The decode cache of every live slot is a run of pool blocks behind a
+    # per-slot block table; the *logical* layout is bit-identical to the
+    # dense engine's (kept rows at [0, capacity), appends from `capacity`),
+    # with never-valid gaps and not-yet-grown tails backed by the null
+    # block.  Admission writes only the blocks that cover actual kept rows
+    # — that is where eviction quality becomes freed memory — and append
+    # blocks grow one at a time ahead of each decode chunk.
+
+    def _request_blocks(self, n_prompt: int) -> tuple[int, int]:
+        """(worst-case kept-data blocks, append blocks beyond them) for a
+        prompt of ``n_prompt`` tokens — the admission cost model.  Short
+        prompts and tight budgets need fewer data blocks than the dense
+        engine's uniform ``capacity + margin`` rows: that delta is the
+        concurrency eviction buys."""
+        data = self.pool.blocks_for(min(n_prompt, self.capacity))
+        appends = sum(1 for jb in self._append_jbs if jb >= data)
+        return data, appends
+
+    def _admission_gate(self, req: Request) -> bool:
+        """Free-block admission: the FCFS head admits only when the pool
+        can cover its worst-case kept rows — plus, under
+        ``reserve_appends``, its whole future decode growth (no-preempt
+        guarantee); optimistic admission asks only one append block.
+        Blocks evictable from the prefix cache count as free — the engine
+        reclaims them on demand."""
+        data, appends = self._request_blocks(len(req.prompt))
+        need = data + (appends if self.reserve_appends else 1)
+        free = self.pool.available_blocks()
+        if self.prefix_cache is not None and self.prefix_cache.pool is not None:
+            free += self.prefix_cache.evictable_pool_blocks()
+        return free >= need
+
+    def _alloc_blocks(self, n: int) -> Optional[np.ndarray]:
+        """Pool allocation that reclaims prefix-cache blocks on demand:
+        live requests outrank cached prefixes."""
+        ids = self.pool.alloc(n)
+        if ids is None and (self.prefix_cache is not None
+                            and self.prefix_cache.pool is not None):
+            # shortfall vs *available* blocks: ordinary allocs may not dip
+            # into append reservations, so reclaiming only down to the
+            # free-list size would under-evict and leave alloc failing
+            if self.prefix_cache.evict_pool_blocks(
+                    n - self.pool.available_blocks()):
+                ids = self.pool.alloc(n)
+        return ids
+
+    def _reserve_blocks(self, n: int) -> bool:
+        """`pool.reserve` with the same reclaim-from-prefix-cache fallback
+        as `_alloc_blocks`.  Without it the admission gate (which counts
+        evictable prefix blocks as free) and a failing reserve would agree
+        to disagree forever: the gate re-admits, the reserve re-fails with
+        the pool state unchanged — a livelock."""
+        if self.pool.reserve(n):
+            return True
+        if self.prefix_cache is not None and self.prefix_cache.pool is not None:
+            if self.prefix_cache.evict_pool_blocks(
+                    n - self.pool.available_blocks()):
+                return self.pool.reserve(n)
+        return False
+
+    def _paged_place(self, sched, r: Request, cache: dict) -> Optional[int]:
+        """Write the admitted cache's kept rows into freshly allocated
+        blocks and point a slot's table at them.  Returns the slot, or
+        None when the pool cannot cover the kept rows right now."""
+        mask = cache["attn"]["mask"]  # (L, 1, C, KV)
+        C = mask.shape[2]
+        rows = jnp.arange(C, dtype=jnp.int32)[None, None, :, None]
+        used = int(jnp.max(jnp.where(mask, rows, 0))) + 1
+        ids = self._alloc_blocks(self.pool.blocks_for(used))
+        if ids is None:
+            return None
+        outstanding = sum(1 for jb in self._append_jbs if jb >= len(ids))
+        if self.reserve_appends and not self._reserve_blocks(outstanding):
+            self.pool.free(ids)  # promise can't be kept: don't admit
+            return None
+        self.pool.write_cache(cache["attn"], ids)
+        slot = sched.place(r)
+        self._slot_reserved[slot] = outstanding if self.reserve_appends else 0
+        self._admit_seq[slot] = self._admit_counter
+        self._admit_counter += 1
+        self._slot_blocks[slot] = [int(b) for b in ids]
+        self._table_h[slot] = 0
+        self._table_h[slot, :len(ids)] = ids
+        self._table_dev = jnp.asarray(self._table_h.copy())  # np copy: the mirror mutates while transfers stage lazily
+        self._cursor_h[slot] = self.capacity  # appends start where dense do
+        self._npos_h[slot] = int(cache["next_pos"][0, 0])
+        return slot
+
+    def _decode_fn_paged(self, steps: int):
+        fn = self._decode_fns.get(("paged", steps))
+        if fn is None:
+            depth = self._paged_depth
+
+            def body(params, tok, table, cursor, next_pos, pool, active):
+                cache = {"attn": {"table": table}, "pool": pool,
+                         "cursor": cursor, "next_pos": next_pos}
+                last, cache, toks = policies.decode_chunk(
+                    params, self.cfg, tok, cache, steps, active=active,
+                    paged_depth=depth)
+                return last, cache["pool"], toks
+
+            fn = jax.jit(body)
+            self._decode_fns[("paged", steps)] = fn
+        return fn
+
+    def _free_slot_blocks(self, slot: int) -> None:
+        ids = self._slot_blocks[slot]
+        if ids:
+            self.pool.free(ids)
+            self._slot_blocks[slot] = []
+        if self._slot_reserved[slot]:
+            self.pool.unreserve(int(self._slot_reserved[slot]))
+            self._slot_reserved[slot] = 0
+        self._table_h[slot] = 0
+
+    def _release_slot(self, slot: int) -> None:
+        if self.pool is not None:
+            # the device table row is stale until the next admission
+            # overwrites it — harmless: the slot is inactive, its reads
+            # are discarded and its writes are null-routed
+            self._free_slot_blocks(slot)
+
+    def _latest_admitted_active(self, active) -> Optional[int]:
+        live = np.nonzero(active)[0]
+        if len(live) == 0:
+            return None
+        return int(live[np.argmax(self._admit_seq[live])])
+
+    def _preempt(self, slot: int, sched, active, remaining,
+                 last_emit) -> None:
+        """Preempt-to-queue: abandon a running slot's decode state, free
+        its blocks, and push its request back to the FCFS head for a
+        from-scratch re-serve (deterministic greedy decode ⇒ identical
+        tokens).  The original ``ttft_s`` / ``first_token_s`` stamps are
+        kept — the client already received those tokens and the replay is
+        bit-identical — so the stall lands in ``max_gap_s``/``tpot_s``
+        (see ``_admit``)."""
+        r = sched.running[slot]
+        sched.requeue(r)
+        r.out_tokens = []  # rebuilt bit-identically by the re-serve
+        r.preempt_emit_s = last_emit[slot]  # the stall starts here
+        r.cached_prefix_tokens = 0
+        r.admission_cache = None
+        self._free_slot_blocks(slot)
+        active[slot] = False
+        remaining[slot] = 0
+        self.stats["preemptions"] += 1
+
+    def _ensure_append_blocks(self, sched, active, remaining, last_emit,
+                              steps: int) -> None:
+        """Allocate the append blocks every live slot needs for the next
+        ``steps`` decode tokens.  When the pool runs dry, the latest
+        admission is preempted to the queue (LIFO victims preserve FCFS
+        finish order) until the remaining slots fit — the engine-sizing
+        assert guarantees a lone request always fits."""
+        bs = self.pool.block_size
+        changed = False
+        for slot in np.nonzero(active)[0].tolist():
+            if not active[slot]:
+                continue  # preempted by an earlier slot's reclaim
+            cur = int(self._cursor_h[slot])
+            last = min(cur + steps - 1, self._paged_depth - 1)
+            for jb in range(cur // bs, last // bs + 1):
+                if self._table_h[slot, jb] != 0:
+                    continue
+                if self._slot_reserved[slot] > 0:
+                    # redeem this slot's admission-time promise — cannot
+                    # fail (the pool keeps reserved blocks on the free
+                    # list), which is the no-preempt guarantee
+                    ids = self.pool.alloc(1, from_reserved=True)
+                    assert ids is not None
+                    self._slot_reserved[slot] -= 1
+                else:
+                    ids = self._alloc_blocks(1)
+                while ids is None:
+                    victim = self._latest_admitted_active(active)
+                    assert victim is not None, "pool exhausted with no slots"
+                    self._preempt(victim, sched, active, remaining,
+                                  last_emit)
+                    changed = True
+                    if not active[slot]:
+                        break  # this slot was its own latest admission
+                    ids = self._alloc_blocks(1)
+                if not active[slot]:
+                    break
+                # a reallocated block may carry its previous owner's stale
+                # validity rows — invalidate before the table exposes it
+                self.pool.zero_mask(ids)
+                self._table_h[slot, jb] = int(ids[0])
+                self._slot_blocks[slot].append(int(ids[0]))
+                changed = True
+        if changed:
+            self._table_dev = jnp.asarray(self._table_h.copy())  # np copy: the mirror mutates while transfers stage lazily
+
+    def _reclaim_for_head(self, sched) -> None:
+        """Nothing is running yet the queue head stays gated: every
+        missing block is pinned by the prefix cache.  Reclaim until the
+        gate passes, or fail with a sizing error instead of spinning."""
+        while True:
+            if not sched._queue:
+                return
+            if self._admission_gate(sched._queue[0]):
+                return
+            pc = self.prefix_cache
+            if pc is None or pc.pool is None or not pc.evict_pool_blocks(1):
+                raise RuntimeError(
+                    "kv pool too small for the queue head even with the "
+                    "prefix cache emptied; raise --kv-pool-mb")
 
 
 class BucketedEngine(_SlotDecodeMixin):
@@ -671,6 +1046,14 @@ class BucketedEngine(_SlotDecodeMixin):
 
     def cache_bytes(self, n_in: int) -> dict:
         return cache_bytes(self.cfg, self.capacity + self.decode_margin, n_in)
+
+    def kv_device_bytes(self) -> int:
+        """K+V bytes of the dense live slot cache (see the paged engine's
+        pool-aware counterpart)."""
+        a = self.cfg.attn
+        per_row = 2 * self.cfg.num_layers * a.kv_dim \
+            * jnp.dtype(self.cfg.dtype).itemsize
+        return self.num_slots * (self.capacity + self.decode_margin) * per_row
 
     def warmup(self, prompt_lens, batch_sizes=(1,)) -> None:
         """Pre-build compile-cache entries for expected traffic shapes."""

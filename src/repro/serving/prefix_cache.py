@@ -37,6 +37,14 @@ is LRU over unpinned, childless entries under a byte budget — the budget
 is respected after every insert, and an insert that cannot fit by evicting
 unpinned entries is simply skipped (the request still serves; it just
 doesn't populate the cache).
+
+With a ``KVBlockPool`` bound (paged serving), an entry's KV span lives as
+a **pinned run of pool blocks** instead of a private device copy: shared
+prefixes occupy the same physical pool the decode caches draw from (one
+copy, refcount-shared along the chain via parent entries), the
+``max_bytes`` budget caps how much of the pool the cache may pin, and the
+engine reclaims unpinned entries on demand when live requests need the
+blocks — cached prefixes never outrank running traffic.
 """
 
 from __future__ import annotations
@@ -71,11 +79,12 @@ class _Node:
 class PrefixEntry:
     """One cached chunk-boundary snapshot (see module docstring)."""
 
-    __slots__ = ("depth", "start", "parent", "k_block", "v_block", "score",
-                 "logits", "nbytes", "refs", "node", "src_capacity")
+    __slots__ = ("depth", "start", "parent", "k_block", "v_block", "blocks",
+                 "score", "logits", "nbytes", "refs", "node", "src_capacity")
 
-    def __init__(self, *, depth, start, parent, k_block, v_block, score,
-                 logits, node, src_capacity):
+    def __init__(self, *, depth, start, parent, score, logits, node,
+                 src_capacity, k_block=None, v_block=None, blocks=None,
+                 block_bytes=0):
         self.depth = depth  # prefix length (chunk-aligned)
         self.start = start  # parent entry's depth; blocks cover [start, depth)
         self.parent: Optional[PrefixEntry] = parent
@@ -86,14 +95,19 @@ class PrefixEntry:
         # capacity-homogeneous by construction (insert only links parents
         # of the same src_capacity), so a hit never mixes rungs.
         self.src_capacity = src_capacity
-        self.k_block = k_block  # (L, 1, depth-start, KV, hd)
-        self.v_block = v_block
+        self.k_block = k_block  # (L, 1, depth-start, KV, hd), or None when
+        self.v_block = v_block  # the span lives in the shared block pool:
+        self.blocks = blocks  # (n,) int32 pinned pool block ids
         self.score = score  # trimmed scoring.ScoreState at ``depth``
         self.logits = logits  # (1, V) last-chunk logits (row depth-1)
         self.node = node
         self.refs = 0  # child entries + in-flight pins; evictable at 0
+        if k_block is not None:
+            span_bytes = k_block.nbytes + v_block.nbytes
+        else:  # pool-backed: caller sizes the span in whole blocks
+            span_bytes = (0 if blocks is None else len(blocks)) * block_bytes
         self.nbytes = (
-            k_block.nbytes + v_block.nbytes + logits.nbytes
+            span_bytes + logits.nbytes
             + sum(leaf.nbytes for leaf in jax.tree.leaves(score))
         )
 
@@ -111,11 +125,18 @@ class PrefixCache:
     policy-shaped; chunk alignment defines which depths are cacheable)."""
 
     def __init__(self, *, chunk: int, max_bytes: int,
-                 policy: Optional[str] = None):
+                 policy: Optional[str] = None, pool=None):
         assert chunk > 0 and max_bytes > 0
         self.chunk = chunk
         self.max_bytes = max_bytes
         self.policy = policy  # bound by the first engine that adopts it
+        # paged mode: entry KV spans are pinned runs of this KVBlockPool's
+        # blocks (one physical copy shared with decode) instead of private
+        # device arrays.  Chunk boundaries must land on block boundaries.
+        self.pool = pool
+        if pool is not None:
+            assert chunk % pool.block_size == 0, \
+                "chunk must be a multiple of the pool block size"
         # the bound params tree, held strongly: identity (``is``) stays
         # valid for the cache's lifetime (a bare id() could be reused
         # after GC and let a different model's weights silently pass)
@@ -237,24 +258,51 @@ class PrefixCache:
             self._lru.move_to_end(node.entry)
             return node.entry
         start = parent.depth if parent is not None else 0
-        entry = PrefixEntry(
-            depth=depth, start=start, parent=parent,
-            k_block=state.k[:, :, start:depth],
-            v_block=state.v[:, :, start:depth],
-            score=state.score.snapshot(depth), logits=logits, node=node,
-            src_capacity=src_capacity,
-        )
-        if not self._make_room(entry.nbytes):
-            self._prune_node(node)  # drop the entry-less leaf we created
-            return None
+        if self.pool is not None:
+            nblk = (depth - start) // self.pool.block_size
+            entry = PrefixEntry(
+                depth=depth, start=start, parent=parent, blocks=None,
+                block_bytes=self.pool.block_bytes,
+                score=state.score.snapshot(depth), logits=logits, node=node,
+                src_capacity=src_capacity,
+            )
+            entry.nbytes += nblk * self.pool.block_bytes
+            if not self._make_room(entry.nbytes):
+                self._prune_node(node)
+                return None
+            ids = self.pool.alloc(nblk)
+            if ids is None:
+                # budget ok but the pool itself is consumed by live decode
+                # caches — running traffic outranks cached prefixes
+                self._prune_node(node)
+                return None
+            self.pool.write_span(state.k[:, :, start:depth],
+                                 state.v[:, :, start:depth], ids)
+            self.pool.note_pinned(nblk)
+            entry.blocks = ids
+        else:
+            entry = PrefixEntry(
+                depth=depth, start=start, parent=parent,
+                k_block=state.k[:, :, start:depth],
+                v_block=state.v[:, :, start:depth],
+                score=state.score.snapshot(depth), logits=logits, node=node,
+                src_capacity=src_capacity,
+            )
+            if not self._make_room(entry.nbytes):
+                self._prune_node(node)  # drop the entry-less leaf we created
+                return None
         node.entry = entry
         if parent is not None:
             parent.refs += 1
         self._lru[entry] = None
         self.bytes += entry.nbytes
         self.inserts += 1
-        spans = tuple(c.depth - c.start for c in self._chain(entry))
-        if (spans, src_capacity) not in self._mat_fns:
+        if self.pool is not None:
+            key = ("pool", depth // self.pool.block_size, src_capacity)
+        else:
+            spans = tuple(c.depth - c.start for c in self._chain(entry))
+            key = (spans, src_capacity)
+        if key not in self._mat_fns:
             self.materialize(entry, src_capacity)  # compile + warm
         return entry
 
@@ -327,9 +375,40 @@ class PrefixCache:
         self.bytes -= entry.nbytes
         self.evictions += 1
         entry.node.entry = None
+        if entry.blocks is not None:  # return the pinned run to the pool
+            self.pool.free(entry.blocks)
+            self.pool.note_pinned(-len(entry.blocks))
+            entry.blocks = None
         if entry.parent is not None:
             self.release(entry.parent)
         self._prune_node(entry.node)
+
+    # -- pool reclaim (paged serving) -------------------------------------
+    def evictable_pool_blocks(self) -> int:
+        """Pool blocks reclaimable *right now* (unpinned childless
+        entries).  An underestimate — evicting a leaf can make its parent
+        evictable — which only makes the admission gate conservative."""
+        if self.pool is None:
+            return 0
+        return sum(len(e.blocks) for e in self._lru
+                   if e.refs == 0 and e.blocks is not None)
+
+    def evict_pool_blocks(self, need: int) -> bool:
+        """Evict LRU unpinned entries until at least ``need`` pool blocks
+        returned to the free list (cascading up freed chains).  Returns
+        True iff the need was fully met — live decode traffic calls this
+        when the pool runs dry, so cached prefixes yield to admissions."""
+        if self.pool is None:
+            return False
+        freed = 0
+        while freed < need:
+            victim = next((e for e in self._lru
+                           if e.refs == 0 and e.blocks is not None), None)
+            if victim is None:
+                return False
+            freed += len(victim.blocks)
+            self._remove(victim)
+        return True
 
     @staticmethod
     def _prune_node(node: _Node) -> None:
@@ -359,8 +438,36 @@ class PrefixCache:
         boundary logits (the next-token distribution when the requesting
         prompt is exactly the cached prefix)."""
         chain = self._chain(entry)
-        spans = tuple(c.depth - c.start for c in chain)
         depth = entry.depth
+        if self.pool is not None:
+            # pool-backed: the whole prefix is one block-id gather — the
+            # chain's runs concatenate in depth order, and gathers are
+            # exact, so the resumed state is bitwise the streamed one
+            ids = np.concatenate([c.blocks for c in chain])
+            key = ("pool", len(ids), capacity)
+            fn = self._mat_fns.get(key)
+            if fn is None:
+                bs = self.pool.block_size
+
+                def build(pk, pv, ids, score):
+                    def flat(x):  # (L, n, bs, KV, hd) -> (L, 1, depth, ...)
+                        return x.reshape((x.shape[0], 1, -1) + x.shape[3:])
+
+                    snap = tf.ChunkState(
+                        k=flat(pk[:, ids]), v=flat(pv[:, ids]), score=score,
+                        pos=jnp.asarray(len(ids) * bs, jnp.int32))
+                    return tf.resume_chunk_state(snap, capacity)
+
+                fn = jax.jit(build)
+                self._mat_fns[key] = fn
+                while len(self._mat_fns) > self.max_materialize_programs:
+                    self._mat_fns.popitem(last=False)
+            else:
+                self._mat_fns.move_to_end(key)
+            state = fn(self.pool.k, self.pool.v, jnp.asarray(ids),
+                       entry.score)
+            return state, entry.logits
+        spans = tuple(c.depth - c.start for c in chain)
         fn = self._mat_fns.get((spans, capacity))
         if fn is None:
             def build(ks, vs, score):
@@ -383,8 +490,12 @@ class PrefixCache:
     # -- observability ---------------------------------------------------
     def stats(self) -> dict:
         total = self.hits + self.misses
+        pool_blocks = (sum(len(e.blocks) for e in self._lru
+                           if e.blocks is not None)
+                       if self.pool is not None else 0)
         return {
             "entries": len(self._lru),
+            "pool_blocks_pinned": pool_blocks,
             "materialize_programs": len(self._mat_fns),
             "bytes": self.bytes,
             "max_bytes": self.max_bytes,

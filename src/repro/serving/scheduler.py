@@ -87,6 +87,11 @@ class Request:
     finish_s: Optional[float] = None
     tpot_s: float = 0.0  # mean seconds per output token after the first
     max_gap_s: float = 0.0  # worst stall between consecutive token emissions
+    # -- paged-KV fields -----------------------------------------------
+    # wall time of the last token emitted before a preemption, so the
+    # client-visible stall (preempt -> re-admission re-emit) still lands
+    # in ``max_gap_s`` even though the request changes slots
+    preempt_emit_s: Optional[float] = None
     # -- prefix-cache fields -------------------------------------------
     cached_prefix_tokens: int = 0  # prompt tokens resumed from a cache hit
     admission_cache: Optional[dict] = None  # mask/pos of the admitted cache
@@ -122,11 +127,18 @@ class SlotScheduler:
         *,
         bucket_for: Callable[[int], int],
         max_prefill_batch: Optional[int] = None,
+        admission_gate: Optional[Callable[[Request], bool]] = None,
     ):
         assert num_slots > 0
         self.num_slots = num_slots
         self._bucket_for = bucket_for
         self.max_prefill_batch = max_prefill_batch or num_slots
+        # paged-KV admission: with a block pool bound, a free slot is no
+        # longer sufficient — the gate checks the pool can cover the FCFS
+        # head's worst-case block need before the engine starts its prefill
+        self._admission_gate = admission_gate
+        self._pool = None  # bound KVBlockPool (observability only)
+        self.preemptions = 0
         self._pending: list[Request] = []  # submitted, arrival in the future
         self._queue: list[Request] = []  # arrived, awaiting admission (FCFS)
         self._free: list[int] = list(range(num_slots - 1, -1, -1))
@@ -162,13 +174,44 @@ class SlotScheduler:
     # -- admission / retirement ------------------------------------------
     def next_request(self, now: float) -> Optional[Request]:
         """FCFS head for chunked prefill (one in-flight prompt at a time),
-        or None when nothing has arrived or no slot is free to land in."""
+        or None when nothing has arrived, no slot is free to land in, or
+        the admission gate (paged KV: free-block count) rejects the head.
+        The gate blocks FCFS — no skip-ahead — so admission order, and
+        therefore served tokens, stay deterministic under memory
+        pressure."""
         self.poll_arrivals(now)
         if not self._queue or not self._free:
+            return None
+        if (self._admission_gate is not None
+                and not self._admission_gate(self._queue[0])):
             return None
         req = self._queue.pop(0)
         req.state = RequestState.PREFILL
         return req
+
+    def push_front(self, req: Request) -> None:
+        """Return an un-placed request (admission found the pool dry after
+        its prefill) to the queue head; it re-prefills when blocks free."""
+        req.state = RequestState.QUEUED
+        self._queue.insert(0, req)
+
+    def requeue(self, req: Request) -> int:
+        """Preempt-to-queue (paged KV, pool dry): yank a *running* request
+        back to the head of the arrival queue.  Its slot frees, its decode
+        state is abandoned (the engine released the blocks), and it will
+        re-prefill from scratch when blocks are available — greedy decode
+        is deterministic, so the re-served tokens are identical.  Returns
+        the freed slot."""
+        slot = req.slot
+        assert slot is not None and self.running.get(slot) is req
+        del self.running[slot]
+        self._free.append(slot)
+        req.slot = None
+        req.state = RequestState.QUEUED
+        req.done = False
+        self.preemptions += 1
+        self._queue.insert(0, req)
+        return slot
 
     def next_prefill_group(self, now: float) -> Optional[list[Request]]:
         """The next same-bucket admission group, or None if nothing is
@@ -191,6 +234,23 @@ class SlotScheduler:
         req.state = RequestState.DECODE
         self.running[slot] = req
         return slot
+
+    def bind_pool(self, pool) -> None:
+        """Attach the engine's ``KVBlockPool`` for observability: the
+        scheduler never touches device memory, but operators read
+        admission pressure here."""
+        self._pool = pool
+
+    def pool_stats(self) -> dict:
+        """Block-pool utilization (empty when serving dense caches), plus
+        the scheduler-side pressure signals: queued-but-arrived requests
+        and preemption count."""
+        if self._pool is None:
+            return {}
+        s = dict(self._pool.stats())
+        s["queued"] = len(self._queue)
+        s["preemptions"] = self.preemptions
+        return s
 
     def prefix_stats(self) -> dict:
         """Aggregate prefix-reuse accounting over finished requests: how
