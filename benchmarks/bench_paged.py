@@ -112,12 +112,17 @@ def bench(seed: int = 0, trials: int = 3):
         for name, eng in engines.items():
             done = eng.run(make_trace(seed, cfg.vocab_size))
             ttft = np.array([r.ttft_s for r in done])
+            steps = max(eng.stats.get("decode_steps", 0), 1)
             m = {
                 "max_concurrency": eng.stats["max_concurrency"],
                 "ttft_p95_ms": 1e3 * float(np.percentile(ttft, 95)),
                 "ttft_mean_ms": 1e3 * float(ttft.mean()),
                 "kv_bytes": eng.kv_device_bytes(),
                 "preemptions": eng.stats.get("preemptions", 0),
+                # per-token decode step cost + which dispatch tier served it
+                "decode_step_ms":
+                    1e3 * eng.stats.get("decode_time_s", 0.0) / steps,
+                "decode_path": eng.stats.get("decode_path", "dense"),
             }
             best = out.get(name)
             if best is None or m["ttft_p95_ms"] < best["ttft_p95_ms"]:
@@ -157,6 +162,8 @@ def run(report):
                f"{m['max_concurrency']}")
         report(f"paged/{name}_ttft_p95_ms", None, f"{m['ttft_p95_ms']:.0f}")
         report(f"paged/{name}_kv_bytes", None, f"{m['kv_bytes']}")
+        report(f"paged/{name}_decode_step_ms", None,
+               f"{m['decode_step_ms']:.2f} path={m['decode_path']}")
     pool = res["paged"]["kv_pool"]
     report("paged/pool_high_water_blocks", None,
            f"{pool['high_water_blocks']}/{pool['blocks_total']}")
@@ -173,11 +180,13 @@ def main():
     args = ap.parse_args()
     res = bench(args.seed, args.trials)
     print(f"{'engine':8s} {'conc':>5s} {'ttft_p95':>9s} {'ttft_mean':>10s} "
-          f"{'kv_bytes':>9s} {'preempt':>8s}")
+          f"{'kv_bytes':>9s} {'preempt':>8s} {'step_ms':>8s} "
+          f"{'path':>9s}")
     for name, m in res.items():
         print(f"{name:8s} {m['max_concurrency']:5d} "
               f"{m['ttft_p95_ms']:9.0f} {m['ttft_mean_ms']:10.0f} "
-              f"{m['kv_bytes']:9d} {m['preemptions']:8d}")
+              f"{m['kv_bytes']:9d} {m['preemptions']:8d} "
+              f"{m['decode_step_ms']:8.2f} {m['decode_path']:>9s}")
     print(f"pool: {res['paged']['kv_pool']}")
     print(_verdict(res)[1])
 

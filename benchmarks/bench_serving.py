@@ -134,6 +134,16 @@ def run_lockstep(eng, reqs, *, max_batch=4):
     return m
 
 
+def _decode_step_stats(eng) -> dict:
+    """Per-token decode step wall cost and the dispatch tier that served
+    it (kernel / gather / fallback / dense) — pulled from engine stats."""
+    steps = max(eng.stats.get("decode_steps", 0), 1)
+    return {
+        "decode_step_ms": 1e3 * eng.stats.get("decode_time_s", 0.0) / steps,
+        "decode_path": eng.stats.get("decode_path", "dense"),
+    }
+
+
 def run_bucketed(eng, reqs):
     t0 = time.perf_counter()
     done = eng.run(reqs)
@@ -143,6 +153,7 @@ def run_bucketed(eng, reqs):
                      + len(eng._decode_fns))
     m["compile_cache"] = eng.prefill_cache.stats()
     m["kv_bytes_peak"] = eng.kv_device_bytes()
+    m.update(_decode_step_stats(eng))
     return m
 
 
@@ -156,6 +167,7 @@ def run_chunked(eng, reqs):
     m["compile_cache"] = eng.chunk_cache.stats()
     m["engine_stats"] = dict(eng.stats)
     m["kv_bytes_peak"] = eng.kv_device_bytes()
+    m.update(_decode_step_stats(eng))
     return m
 
 
@@ -222,6 +234,8 @@ def run(report):
         report(f"serving/{name}_stall_max_ms", None,
                f"{m['stall_max_ms']:.0f}")
         report(f"serving/{name}_compiles", None, f"{m['compiles']}")
+        report(f"serving/{name}_decode_step_ms", None,
+               f"{m['decode_step_ms']:.2f} path={m['decode_path']}")
         # peak device KV bytes per config: BENCH_*.json tracks the memory
         # trajectory across PRs, not just latency/throughput
         report(f"serving/{name}_kv_bytes_peak", None,
@@ -256,14 +270,17 @@ def main():
                 n_long=args.n_long, lockstep=args.lockstep)
     print(f"{'engine':10s} {'tok/s':>8s} {'ttft_ms':>9s} {'ttft_p95':>9s} "
           f"{'tpot_ms':>8s} {'tpot_p95':>9s} {'stall_ms':>9s} "
-          f"{'compiles':>8s} {'wall_s':>7s}")
+          f"{'compiles':>8s} {'wall_s':>7s} {'step_ms':>8s} {'path':>9s}")
     for name, m in res.items():
         stall = (f"{m['stall_max_ms']:9.1f}"
                  if np.isfinite(m["stall_max_ms"]) else f"{'n/a':>9s}")
+        step = (f"{m['decode_step_ms']:8.2f}"
+                if "decode_step_ms" in m else f"{'n/a':>8s}")
         print(f"{name:10s} {m['tok_per_s']:8.1f} {m['ttft_mean_ms']:9.1f} "
               f"{m['ttft_p95_ms']:9.1f} {m['tpot_mean_ms']:8.2f} "
               f"{m['tpot_p95_ms']:9.2f} {stall} "
-              f"{m.get('compiles', 0):8d} {m['wall_s']:7.2f}")
+              f"{m.get('compiles', 0):8d} {m['wall_s']:7.2f} "
+              f"{step} {m.get('decode_path', 'n/a'):>9s}")
     ratio = (res["chunked"]["tok_per_s"]
              / max(res["bucketed"]["tok_per_s"], 1e-9))
     print(f"chunked/bucketed throughput: {ratio:.2f}x  "

@@ -17,7 +17,11 @@ Gated verdicts:
 * ``paged/admission_verdict``  — at an equal KV byte budget the paged
   block-pool engine admits >= 1.5x the concurrent requests of the dense
   engine on a mixed-length Zipf trace, p95 TTFT no worse (within the
-  CPU dispatch-noise guard).
+  CPU dispatch-noise guard);
+* ``kernels/paged_decode_verdict`` — the gather-free paged flash-decode
+  path stays within the analytic HBM roofline budget (touched bytes
+  <= ideal/0.85) at every (B, depth, block_size) point *and* measures
+  strictly faster than the dense-gather oracle wherever depth >= 2k.
 
 The JSON artifact carries every reported benchmark row plus the verdict
 map, so a red gate links straight to the number that moved.

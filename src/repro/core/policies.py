@@ -31,10 +31,80 @@ SINGLE_PASS = (
 MULTI_PASS = ("laq", "speckv")
 ALL_POLICIES = SINGLE_PASS + MULTI_PASS
 
+_NEG_INF = -1e30
+
 
 class EvictionResult(NamedTuple):
     logits: jnp.ndarray  # (B, V) next-token logits after the prompt
     cache: dict  # budgeted decode cache
+
+
+class Sampling(NamedTuple):
+    """Static sampling config for the fused decode epilogue.
+
+    ``temperature <= 0`` is greedy argmax — the bit-exact default every
+    differential trace test relies on; the filters are then ignored.
+    ``top_k = 0`` and ``top_p = 1.0`` disable their filters."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+
+def filter_logits(
+    logits: jnp.ndarray,  # (..., V)
+    *,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> jnp.ndarray:
+    """Pure-jnp top-k / nucleus (top-p) filtering reference: logits outside
+    the kept set drop to -inf, kept logits pass through *unchanged*.
+
+    top-k keeps the k largest (ties at the k-th value are all kept);
+    top-p keeps the smallest descending-probability prefix whose mass
+    reaches ``top_p`` (always at least the argmax).  Both are identity
+    when disabled, so the no-filter path stays bitwise what it was."""
+    V = logits.shape[-1]
+    if top_k and top_k < V:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, _NEG_INF, logits)
+    if top_p < 1.0:
+        srt = jnp.sort(logits, axis=-1)[..., ::-1]  # descending
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = (cum - probs) < top_p  # mass *before* each token < p
+        thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        logits = jnp.where(logits < thr, _NEG_INF, logits)
+    return logits
+
+
+def fold_keys(seeds: jnp.ndarray, positions: jnp.ndarray) -> jax.Array:
+    """Per-request, per-position PRNG keys: ``fold_in(PRNGKey(seed), pos)``
+    for each (seed, position) pair.  Keyed on the *absolute* position of
+    the sampled token, so a preempted request replaying the same positions
+    resamples the same tokens — sampling stays replay-deterministic the
+    way greedy decode is prefix-stable."""
+    return jax.vmap(
+        lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+    )(seeds, positions)
+
+
+def sample_logits(
+    logits: jnp.ndarray,  # (B, V)
+    keys: jax.Array,  # (B,) per-row PRNG keys (``fold_keys``)
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> jnp.ndarray:
+    """Temperature / top-k / top-p categorical sampling, one independent
+    key per row — the pure-jnp reference the fused decode epilogue jits
+    and the host-sampling baseline calls eagerly.  Returns (B,) ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    x = logits.astype(jnp.float32) / temperature
+    x = filter_logits(x, top_k=top_k, top_p=top_p)
+    return jax.vmap(jax.random.categorical)(keys, x)
 
 
 def decode_one(
@@ -45,8 +115,10 @@ def decode_one(
     *,
     active: Optional[jnp.ndarray] = None,  # (B,) live-slot mask
     paged_depth: Optional[int] = None,  # static depth of a paged cache
+    sampling: Optional[Sampling] = None,  # None / temperature 0 = greedy
+    seeds: Optional[jnp.ndarray] = None,  # (B,) per-request sampling seeds
 ) -> tuple[jnp.ndarray, dict]:
-    """One greedy decode step.  Returns (next_token (B, 1), new cache).
+    """One decode step.  Returns (next_token (B, 1), new cache).
 
     With ``active`` (continuous batching), retired / empty slots don't
     advance: their cache is held fixed and their token freezes, so a slot
@@ -54,12 +126,28 @@ def decode_one(
     its neighbours' step count.  A *paged* cache (``"pool"`` key) gates
     its own advances in-step — the block pool is shared across slots, so
     there is no per-slot pytree to select back to.
+
+    With ``sampling`` at temperature > 0 the next token comes from the
+    fused sampling epilogue instead of argmax: the final-layer logits run
+    through temperature / top-k / top-p and a per-request key folded on
+    the sampled token's absolute position (``fold_keys``), all inside the
+    same compiled program — the host never sees logits.
     """
     paged = "pool" in cache
     logits, new_cache = tf.decode_step(
         params, cfg, token, cache,
         active=active if paged else None, paged_depth=paged_depth)
-    nxt = jnp.argmax(logits, -1)[:, None].astype(token.dtype)
+    if sampling is not None and sampling.temperature > 0.0:
+        assert seeds is not None, "sampling needs per-request seeds"
+        # cache["next_pos"] is the *input* token's position; the token
+        # sampled here sits one past it
+        keys = fold_keys(seeds, cache["next_pos"][:, 0] + 1)
+        nxt = sample_logits(
+            logits, keys, temperature=sampling.temperature,
+            top_k=sampling.top_k, top_p=sampling.top_p,
+        )[:, None].astype(token.dtype)
+    else:
+        nxt = jnp.argmax(logits, -1)[:, None].astype(token.dtype)
     if active is not None:
         nxt = jnp.where(active[:, None], nxt, token)
         if not paged:
@@ -98,16 +186,22 @@ def decode_chunk(
     *,
     active: Optional[jnp.ndarray] = None,
     paged_depth: Optional[int] = None,
+    sampling: Optional[Sampling] = None,
+    seeds: Optional[jnp.ndarray] = None,  # (B,) per-request sampling seeds
 ) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
-    """``steps`` greedy steps *after* ``token``.  Returns (last (B, 1), cache,
+    """``steps`` decode steps *after* ``token``.  Returns (last (B, 1), cache,
     new tokens (B, steps)).  Unlike ``greedy_decode`` the emitted tokens
     exclude the input token — the serving loop emits the prefill's first
-    token at admission and decodes the rest in chunks between admissions."""
+    token at admission and decodes the rest in chunks between admissions.
+    With ``sampling`` set, every step samples through the fused epilogue
+    (see ``decode_one``) — one device round-trip per chunk, not per-step
+    logits transfers."""
 
     def step(carry, _):
         tok, cache = carry
         nxt, cache = decode_one(params, cfg, tok, cache, active=active,
-                                paged_depth=paged_depth)
+                                paged_depth=paged_depth, sampling=sampling,
+                                seeds=seeds)
         return (nxt, cache), nxt[:, 0]
 
     (last, cache), toks = jax.lax.scan(
@@ -124,9 +218,14 @@ def sample_decode(
     steps: int,
     *,
     temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
     key: Optional[jax.Array] = None,
 ) -> tuple[jnp.ndarray, dict]:
-    """Temperature sampling (0 = greedy).  Returns (tokens (B, steps), cache)."""
+    """Temperature / top-k / top-p sampling (temperature 0 = greedy, the
+    filters are then ignored).  Returns (tokens (B, steps), cache).
+    ``filter_logits`` is the shared pure-jnp reference — disabled filters
+    leave the temperature-only path bitwise unchanged."""
     if temperature <= 0.0:
         first = jnp.argmax(first_logits, -1)[:, None].astype(jnp.int32)
         return greedy_decode(params, cfg, first, cache, steps)
@@ -134,7 +233,8 @@ def sample_decode(
     keys = jax.random.split(key, steps)
 
     def pick(logits, k):
-        return jax.random.categorical(k, logits / temperature)[:, None]
+        x = filter_logits(logits / temperature, top_k=top_k, top_p=top_p)
+        return jax.random.categorical(k, x)[:, None]
 
     def step(carry, k):
         tok, cache = carry

@@ -322,31 +322,110 @@ def paged_decode_attention(
     v_pool: jnp.ndarray,
     mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head slot validity
     table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+    *,
+    pos_pool: jnp.ndarray | None = None,  # (N, block_size, KV) int32
+    new_pos: jnp.ndarray | None = None,  # (B,) query-token positions
+    window=None,  # None | python int | traced int32 scalar
+    depth: int | None = None,  # static logical cache depth (jnp gather path)
 ) -> jnp.ndarray:
-    """Decode attention over a paged KV cache (``serving/kv_pool.py``).
+    """Decode attention over a paged KV cache (``serving/kv_pool.py``) —
+    the serving hot path of ``attention.decode_attention_step_paged``.
 
-    The Pallas kernel scalar-prefetches the block table and gathers key
-    tiles straight from the pool — no dense per-sequence copy of the
-    cache exists on the TPU path.  The fallback gathers the block-table
-    view (``ref.gather_paged``, an exact bitwise copy of the pooled rows)
-    and runs the same direct decode attention as the dense path — which
-    is what makes paged serving bit-identical to dense serving on the
-    jnp dispatch (see ``attention.decode_attention_step_paged``).
+    Three dispatch tiers (``paged_decode_path`` names the active one):
+
+    * **kernel** — the Pallas kernel scalar-prefetches the block table
+      (plus ``new_pos`` and the window width, which may be *traced*) and
+      streams K/V/mask/pos tiles straight from the pool: no dense
+      per-sequence copy of the cache exists anywhere on this path.
+    * **gather** — jnp dispatch at small depth: gathers the block-table
+      view (``ref.gather_paged``, an exact bitwise copy of the pooled
+      rows), slices it to ``depth``, and runs the same direct decode
+      attention as the dense path — which is what makes paged serving
+      bit-identical to dense serving on the jnp dispatch.  This is also
+      the test oracle the kernel is checked against.
+    * **fallback** — jnp dispatch beyond ``_DIRECT_SEQ`` rows: a
+      streaming block scan with the kernel's online-softmax recurrence
+      and bounded (B, block_size) temporaries — the memory-traffic shape
+      the roofline budget reads (``benchmarks/bench_kernels.py``).
 
     Dead rows — null blocks behind ragged tables, tails beyond a slot's
     cursor, stale rows of a reallocated block — must be masked False in
-    ``mask_pool``; the mask is the single source of validity.
+    ``mask_pool``; the mask is the single source of validity.  With
+    ``window``, rows additionally need ``new_pos - pos < window``.
     """
     if use_pallas():
         from repro.kernels import paged_attention as pk
 
         return pk.paged_decode_attention_pallas(
-            q, k_pool, v_pool, mask_pool, table,
-            interpret=_pallas_interpret(),
+            q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
+            new_pos=new_pos, window=window, interpret=_pallas_interpret(),
         )
-    from repro.kernels import ref
+    span = table.shape[1] * k_pool.shape[1]
+    if depth is not None:
+        span = min(span, depth)
+    if span <= _DIRECT_SEQ:
+        from repro.kernels import ref
 
-    return ref.paged_decode_attention(q, k_pool, v_pool, mask_pool, table)
+        return ref.paged_decode_attention(
+            q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
+            new_pos=new_pos, window=window, depth=depth)
+    # beyond the direct threshold the dense gather is the O(depth) HBM
+    # copy the paged layout exists to avoid; rows past ``depth`` are
+    # masked False by construction (appends clamp at depth), so the
+    # streaming scan needs no slice
+    return _paged_decode_streaming(
+        q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
+        new_pos=new_pos, window=window)
+
+
+def paged_decode_path(span: int) -> str:
+    """Which ``paged_decode_attention`` tier serves a logical cache of
+    ``span`` rows in the current environment: ``"kernel"`` (Pallas),
+    ``"gather"`` (jnp direct, the bit-exact oracle) or ``"fallback"``
+    (jnp streaming block scan)."""
+    if use_pallas():
+        return "kernel"
+    return "gather" if span <= _DIRECT_SEQ else "fallback"
+
+
+def _paged_decode_streaming(q, k_pool, v_pool, mask_pool, table, *,
+                            pos_pool=None, new_pos=None, window=None):
+    """Gather-free jnp fallback: scan over block-table columns with the
+    kernel's online-softmax recurrence — one (B, block_size) K/V tile in
+    flight per step, never a dense (B, depth, ...) copy."""
+    B, H, hd = q.shape
+    bs, KV = k_pool.shape[1], k_pool.shape[2]
+    group = H // KV
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    cols = jnp.moveaxis(table.astype(jnp.int32), 1, 0)  # (nb, B)
+
+    def body(carry, tb):
+        m, l, acc = carry
+        kb = _expand_gqa(k_pool[tb], group).astype(jnp.float32)
+        vb = _expand_gqa(v_pool[tb], group).astype(jnp.float32)
+        mb = mask_pool[tb]  # (B, bs, KV)
+        if window is not None:
+            mb = mb & ((new_pos[:, None, None] - pos_pool[tb]) < window)
+        s = jnp.einsum("bhd,bkhd->bhk", qf, kb) * scale
+        mh = jnp.repeat(jnp.moveaxis(mb, 2, 1), group, axis=1)  # (B, H, bs)
+        s = jnp.where(mh, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # the explicit where keeps fully-dead rows at l == 0 (m stays
+        # NEG_INF, so exp(s - m) would be exp(0) = 1, not 0)
+        p = jnp.where(mh, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhk,bkhd->bhd", p, vb)
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, H), NEG_INF, jnp.float32),
+        jnp.zeros((B, H), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, cols)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,8 @@ operand: Pallas reads it before the kernel body runs, so each grid step's
 ``BlockSpec`` index map can point the K/V/mask DMA at
 ``table[b, block_index]`` directly — key tiles are gathered from HBM by
 the pipeline itself, and no dense per-sequence copy of the cache ever
-materializes.
+materializes.  This is the serving hot path: the engine's decode step
+attends straight out of the pool (``attention.decode_attention_step_paged``).
 
 Ragged tails need no special casing: unallocated table entries hold the
 pool's null block (id 0), whose validity mask is permanently all-False,
@@ -19,12 +20,21 @@ head — eviction keeps different token positions per head — which the
 dense Pallas decode kernel does not support; here the mask tile is
 block-indexed like K/V, so per-head validity is free.
 
+Sliding windows ride the same machinery: ``pos_pool`` tiles are
+block-indexed exactly like the mask, and the query token's absolute
+position (``new_pos``, per sequence) plus the window width are scalar-
+prefetched next to the table, so the kernel applies
+``new_pos - pos < window`` per key row with zero extra host logic — a
+*traced* window (patterned local:global archs scan it through the layer
+loop) takes this path too, it is just another prefetched scalar.
+
 grid = (B, H, nb), key-block axis innermost with (m, l, acc) scratch
 carry — the same flash-decode recurrence as ``decode_attention.py``, with
 the key stream indirected through the table.
 
-Oracle: ``ref.paged_decode_attention``.  jnp gather fallback in
-``ops.paged_decode_attention``.
+Oracle: ``ref.paged_decode_attention``.  jnp fallbacks in
+``ops.paged_decode_attention`` (gather oracle at small depth, streaming
+block scan beyond).
 """
 
 from __future__ import annotations
@@ -39,9 +49,11 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, nb, scale):
-    ib = pl.program_id(2)
+def _flash_tile(ib, nb, q_ref, k_ref, v_ref, ok, o_ref,
+                m_scr, l_scr, acc_scr, scale):
+    """One key-block step of the online-softmax recurrence.  ``ok`` is the
+    (block_size,) attendability of this tile's rows for this kv head —
+    validity mask, optionally pre-ANDed with the sliding-window predicate."""
 
     @pl.when(ib == 0)
     def _init():
@@ -52,7 +64,6 @@ def _kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
     q = q_ref[0, 0, :].astype(jnp.float32)  # (hd,)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_size, hd)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
-    ok = mask_ref[0, :, 0]  # (block_size,) — this kv head's validity
     s = (k @ q) * scale
     s = jnp.where(ok, s, NEG_INF)
 
@@ -70,6 +81,23 @@ def _kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
         o_ref[0, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, nb, scale):
+    ok = mask_ref[0, :, 0]  # (block_size,) — this kv head's validity
+    _flash_tile(pl.program_id(2), nb, q_ref, k_ref, v_ref, ok, o_ref,
+                m_scr, l_scr, acc_scr, scale)
+
+
+def _kernel_windowed(tbl_ref, npos_ref, win_ref, q_ref, k_ref, v_ref,
+                     mask_ref, pos_ref, o_ref, m_scr, l_scr, acc_scr,
+                     *, nb, scale):
+    b = pl.program_id(0)
+    pos = pos_ref[0, :, 0]  # (block_size,) int32 absolute positions
+    ok = mask_ref[0, :, 0] & ((npos_ref[b] - pos) < win_ref[0])
+    _flash_tile(pl.program_id(2), nb, q_ref, k_ref, v_ref, ok, o_ref,
+                m_scr, l_scr, acc_scr, scale)
+
+
 def paged_decode_attention_pallas(
     q: jnp.ndarray,  # (B, H, hd)
     k_pool: jnp.ndarray,  # (N, block_size, KV, hd) shared block pool
@@ -77,44 +105,87 @@ def paged_decode_attention_pallas(
     mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head slot validity
     table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
     *,
+    pos_pool: jnp.ndarray | None = None,  # (N, block_size, KV) int32
+    new_pos: jnp.ndarray | None = None,  # (B,) query-token positions
+    window=None,  # None | python int | traced int32 scalar
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Flash decode over a paged cache.  Rows the caller considers dead
     (beyond the logical depth, or holding a stale previous owner's data)
     must be masked False in ``mask_pool`` — the mask is the single source
-    of validity, exactly as in the dense cache layout."""
+    of validity, exactly as in the dense cache layout.  With ``window``
+    set, rows also need ``new_pos - pos < window`` to be attended
+    (``pos_pool``/``new_pos`` become required); a sequence/head left with
+    no attendable row returns exact zeros."""
     B, H, hd = q.shape
     N, bs, KV, _ = k_pool.shape
     nb = table.shape[1]
     group = H // KV
     scale = 1.0 / (hd ** 0.5)
 
-    kernel = functools.partial(_kernel, nb=nb, scale=scale)
+    scratch_shapes = [
+        pltpu.VMEM((1,), jnp.float32),
+        pltpu.VMEM((1,), jnp.float32),
+        pltpu.VMEM((hd,), jnp.float32),
+    ]
+    if window is None:
+        kernel = functools.partial(_kernel, nb=nb, scale=scale)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, nb),
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda b, h, ib, tbl: (b, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
+                                                             h // g, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
+                                                             h // g, 0)),
+                pl.BlockSpec((1, bs, 1),
+                             lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
+                                                             h // g)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd),
+                                   lambda b, h, ib, tbl: (b, h, 0)),
+            scratch_shapes=scratch_shapes,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+            interpret=interpret,
+        )(table.astype(jnp.int32), q, k_pool, v_pool, mask_pool)
+
+    assert pos_pool is not None and new_pos is not None, \
+        "sliding-window masking needs pos_pool and new_pos"
+    kernel = functools.partial(_kernel_windowed, nb=nb, scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,  # table, new_pos, window
         grid=(B, H, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, hd), lambda b, h, ib, tbl: (b, h, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, h, ib, t, n, w: (b, h, 0)),
             pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
-                                                         h // g, 0)),
+                         lambda b, h, ib, t, n, w, g=group: (t[b, ib], 0,
+                                                             h // g, 0)),
             pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
-                                                         h // g, 0)),
+                         lambda b, h, ib, t, n, w, g=group: (t[b, ib], 0,
+                                                             h // g, 0)),
             pl.BlockSpec((1, bs, 1),
-                         lambda b, h, ib, tbl, g=group: (tbl[b, ib], 0,
-                                                         h // g)),
+                         lambda b, h, ib, t, n, w, g=group: (t[b, ib], 0,
+                                                             h // g)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, ib, t, n, w, g=group: (t[b, ib], 0,
+                                                             h // g)),
         ],
-        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, ib, tbl: (b, h, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((hd,), jnp.float32),
-        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, h, ib, t, n, w: (b, h, 0)),
+        scratch_shapes=scratch_shapes,
     )
+    win = jnp.asarray(window, jnp.int32).reshape(1)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret,
-    )(table.astype(jnp.int32), q, k_pool, v_pool, mask_pool)
+    )(table.astype(jnp.int32), new_pos.astype(jnp.int32), win,
+      q, k_pool, v_pool, mask_pool, pos_pool)

@@ -255,6 +255,11 @@ def paged_decode_attention(
     v_pool: jnp.ndarray,
     mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head validity
     table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+    *,
+    pos_pool: jnp.ndarray | None = None,  # (N, block_size, KV) int32 positions
+    new_pos: jnp.ndarray | None = None,  # (B,) query-token absolute positions
+    window=None,  # None | python int | traced int32 scalar
+    depth: int | None = None,  # static logical depth: slice the gathered view
 ) -> jnp.ndarray:
     """Dense oracle for the paged decode kernel: materialize the
     block-table gather and run the naive masked decode attention over it.
@@ -262,15 +267,30 @@ def paged_decode_attention(
     masked False in ``mask_pool`` — the mask is the sole validity source,
     as in the dense cache layout.
 
-    A sequence/head with *no* valid key anywhere (an all-null table — a
-    slot between requests) is defined to be exact zeros, matching the
-    flash kernels' ``l -> max(l, eps)`` convention rather than the naive
-    softmax's uniform-over-garbage limit."""
+    ``window`` applies the dense path's sliding-window predicate
+    ``new_pos - pos < window`` on the gathered ``pos_pool`` rows; with
+    ``depth`` the gathered view is sliced to the dense engine's logical
+    cache depth before attending, which makes this oracle *bitwise* the
+    old gather-hop serving step (same reduction order as the dense cache).
+
+    A sequence/head with *no* attendable key anywhere (an all-null table
+    — a slot between requests — or every in-window row masked) is defined
+    to be exact zeros, matching the flash kernels' ``l -> max(l, eps)``
+    convention rather than the naive softmax's uniform-over-garbage
+    limit."""
     mask = gather_paged(mask_pool, table)  # (B, S, KV)
-    out = decode_attention(
-        q, gather_paged(k_pool, table), gather_paged(v_pool, table),
-        kv_mask=mask,
-    )
+    k = gather_paged(k_pool, table)
+    v = gather_paged(v_pool, table)
+    if depth is not None:
+        k, v, mask = k[:, :depth], v[:, :depth], mask[:, :depth]
+    if window is not None:
+        assert pos_pool is not None and new_pos is not None, \
+            "sliding-window masking needs pos_pool and new_pos"
+        pos = gather_paged(pos_pool, table)  # (B, S, KV)
+        if depth is not None:
+            pos = pos[:, :depth]
+        mask = mask & ((new_pos[:, None, None] - pos) < window)
+    out = decode_attention(q, k, v, kv_mask=mask)
     B, H, _ = q.shape
     KV = mask_pool.shape[2]
     alive = jnp.repeat(mask.any(axis=1), H // KV, axis=1)  # (B, H)

@@ -272,19 +272,24 @@ def decode_attention_step_paged(
        inactive or full slots route their scatter to the null block (id
        0), whose mask stays False (the routed mask value is exactly
        ``False``), so zombie decodes never corrupt a neighbour's blocks;
-    2. gathers the block-table view back to the dense layout, slices it
-       to the static ``depth`` the dense engine uses, and runs the *same*
-       ``ops.decode_attention`` call as ``decode_attention_step``.
+    2. attends straight out of the pool via ``ops.paged_decode_attention``
+       — the Pallas kernel streams K/V/mask/pos tiles through the
+       scalar-prefetched block table, so no dense ``(B, depth, ...)``
+       copy of the cache ever materializes on the kernel path.  Sliding
+       windows ride along: the kernel (and both jnp fallbacks) apply
+       ``new_pos - pos < window`` from the pool's ``pos`` metadata, with
+       a *traced* window prefetched like the table.
 
-    Step 2 is the bit-exactness contract: allocated rows are bitwise the
-    rows the dense cache would hold, dead rows (null-backed gaps and
-    tails) are masked False exactly where the dense mask is False, and a
-    masked row contributes an exact zero to the softmax regardless of its
-    payload — so paged serving emits bit-identical tokens to dense
-    serving on every dispatch path.  (``ops.paged_decode_attention``'s
-    Pallas kernel reduces per block tile instead — the TPU hot path,
-    parity within fp tolerance — and is exercised by the kernel suite and
-    ``benchmarks/bench_paged.py``.)
+    The bit-exactness contract lives in the jnp dispatch: at serving
+    depths ``ops.paged_decode_attention`` falls back to the gather
+    oracle (``ref.paged_decode_attention`` with ``depth``), which
+    materializes bitwise the rows the dense cache would hold, slices to
+    the same static ``depth`` and reduces in the same order as
+    ``decode_attention_step`` — so paged serving emits bit-identical
+    tokens to dense serving there (tests/test_kv_pool.py proves it per
+    policy).  The kernel path is exact-parity within fp tolerance
+    (tests/test_paged_decode.py) and is held to a roofline bandwidth
+    budget by ``benchmarks/bench_kernels.py``.
     """
     pool = inp.cache  # this layer's pool slice
     B = h1.shape[0]
@@ -315,16 +320,12 @@ def decode_attention_step_paged(
     pmask = pool["mask"].at[pb, off].set(
         jnp.broadcast_to(write_ok[:, None], (B, KV)))
 
-    # -- gather the dense view and attend exactly as the dense step --
-    def view(x):
-        return x[table].reshape((B, nb * bs) + x.shape[2:])[:, :depth]
-
-    k, v = view(pk), view(pv)
-    pos, mask = view(ppos), view(pmask)
-    att_mask = mask
-    if window is not None:
-        att_mask = mask & ((new_pos[:, :1] - pos) < window)
-    out = ops.decode_attention(q[:, 0], k, v, kv_mask=att_mask)
+    # -- attend in pool layout: the kernel streams tiles through the
+    # block table, the jnp gather fallback reproduces the dense step's
+    # exact reduction (no dense view is built here on any path) --
+    out = ops.paged_decode_attention(
+        q[:, 0], pk, pv, pmask, table, pos_pool=ppos,
+        new_pos=inp.positions[:, 0], window=window, depth=depth)
     out = out.reshape(B, 1, a.q_dim)
     out = linear(out, p["wo"])
     return out, {"k": pk, "v": pv, "pos": ppos, "mask": pmask}

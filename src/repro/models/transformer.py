@@ -1096,8 +1096,9 @@ def decode_step(
     way dense serving does — ``active`` gates the append scatter and the
     cursor / position advance in-step instead.  ``paged_depth`` is the
     static logical cache depth (the dense engine's capacity + margin):
-    the gathered view is sliced to it so the attention computation is
-    shape- and bit-identical to the dense path.
+    the Pallas kernel path attends in pool layout (dead rows beyond it
+    are masked), while the jnp gather fallback slices its view to it so
+    that path stays shape- and bit-identical to dense serving.
     """
     a = cfg.attn
     paged = "pool" in cache

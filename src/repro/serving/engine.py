@@ -204,9 +204,12 @@ class _SlotDecodeMixin:
     def _decode_fn(self, steps: int):
         fn = self._decode_fns.get(steps)
         if fn is None:
-            def body(params, tok, cache, active):
+            sampling = getattr(self, "sampling", None)
+
+            def body(params, tok, cache, active, seeds):
                 return policies.decode_chunk(
-                    params, self.cfg, tok, cache, steps, active=active)
+                    params, self.cfg, tok, cache, steps, active=active,
+                    sampling=sampling, seeds=seeds)
 
             fn = jax.jit(body)
             self._decode_fns[steps] = fn
@@ -307,6 +310,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         kv_pool: Optional[KVBlockPool] = None,  # paged decode-KV memory
         reserve_appends: bool = True,  # guarantee admitted requests' growth
         capture_admission: bool = False,  # stash mask/pos on each Request
+        sampling: Optional[policies.Sampling] = None,  # None = greedy
     ):
         assert tf.chunkable(cfg), \
             "chunked continuous batching serves attention-only decoder archs"
@@ -344,6 +348,12 @@ class ContinuousEngine(_SlotDecodeMixin):
         self._decode_fns: dict = {}
         self._insert_fn = jax.jit(tf.insert_request_cache)
         self.stats: dict = {}
+        # fused sampling epilogue (core/policies.py): temperature / top-k /
+        # top-p run inside the jitted decode chunk with per-request keys
+        # folded on token position — greedy (None / temperature 0) keeps
+        # the bit-exact differential contract
+        self.sampling = sampling
+        self._seeds_h = np.zeros(num_slots, np.int32)
         # prefix-aware KV reuse: chunk-boundary (KV, ScoreState) snapshots
         # shared across requests via a radix trie (serving/prefix_cache.py).
         # A hit resumes mid-prefill with identical streamed state, so the
@@ -513,11 +523,16 @@ class ContinuousEngine(_SlotDecodeMixin):
         # scan, which routes ops.chunk_attention to the jnp fallback
         static_window = tf.is_global_flags(self.cfg) is None
         self.stats = {"prefill_chunks": 0, "decode_chunks": 0,
+                      "decode_steps": 0, "decode_time_s": 0.0,
                       "max_prefill_between_decode": 0,
                       "max_concurrency": 0,
                       "score_path": ("pallas-fused"
                                      if ops.use_pallas() and static_window
-                                     else "jnp-fallback")}
+                                     else "jnp-fallback"),
+                      # which paged_decode_attention tier serves this run
+                      # (kernel / gather / fallback); "dense" when unpooled
+                      "decode_path": (ops.paged_decode_path(self._paged_depth)
+                                      if self.pool is not None else "dense")}
         if self.prefix_cache is not None:
             self.stats.update(prefix_hits=0, prefix_misses=0,
                               prefix_tokens_skipped=0)
@@ -585,6 +600,7 @@ class ContinuousEngine(_SlotDecodeMixin):
                             continue  # every live slot was preempted
                         dispatched = active.copy()
                         fn = self._decode_fn_paged(steps)
+                        t_dec = time.perf_counter()
                         # snapshot the host mirrors with *numpy* copies
                         # before handing them to jax: dispatch is async
                         # and the host->device staging of an argument can
@@ -596,7 +612,8 @@ class ContinuousEngine(_SlotDecodeMixin):
                             self.params, tok, self._table_dev,
                             jnp.asarray(self._cursor_h.copy()),
                             jnp.asarray(self._npos_h[:, None].copy()),
-                            self.pool.tree(), jnp.asarray(active.copy()))
+                            self.pool.tree(), jnp.asarray(active.copy()),
+                            jnp.asarray(self._seeds_h.copy()))
                         self.pool.set_tree(ptree)
                         # mirror the device advance rule exactly: slots
                         # active at dispatch move `steps`, cursors clamp
@@ -606,10 +623,15 @@ class ContinuousEngine(_SlotDecodeMixin):
                         self._npos_h[dispatched] += steps
                     else:
                         fn = self._decode_fn(steps)
+                        t_dec = time.perf_counter()
                         tok, live, toks = fn(self.params, tok, live,
-                                             jnp.asarray(active))
+                                             jnp.asarray(active),
+                                             jnp.asarray(self._seeds_h))
+                    toks_np = np.asarray(toks)  # device sync: tokens landed
                     self.stats["decode_chunks"] += 1
-                    self._collect(np.asarray(toks), steps, sched, active,
+                    self.stats["decode_steps"] += steps
+                    self.stats["decode_time_s"] += time.perf_counter() - t_dec
+                    self._collect(toks_np, steps, sched, active,
                                   remaining, last_emit, t0)
                 elif pf is None:
                     now2 = time.perf_counter() - t0
@@ -711,7 +733,8 @@ class ContinuousEngine(_SlotDecodeMixin):
             slot = sched.place(r)
             live = self._insert_fn(live, cache, slot)
         now = time.perf_counter() - t0
-        first = int(jnp.argmax(pf.logits[0]))
+        self._seeds_h[slot] = r.eviction_seed
+        first = self._first_token(pf.logits, r.eviction_seed, pf.n)
         tok = tok.at[slot, 0].set(first)
         r.out_tokens = [first]
         if r.first_token_s is None:
@@ -829,18 +852,40 @@ class ContinuousEngine(_SlotDecodeMixin):
         fn = self._decode_fns.get(("paged", steps))
         if fn is None:
             depth = self._paged_depth
+            sampling = self.sampling
 
-            def body(params, tok, table, cursor, next_pos, pool, active):
+            def body(params, tok, table, cursor, next_pos, pool, active,
+                     seeds):
                 cache = {"attn": {"table": table}, "pool": pool,
                          "cursor": cursor, "next_pos": next_pos}
                 last, cache, toks = policies.decode_chunk(
                     params, self.cfg, tok, cache, steps, active=active,
-                    paged_depth=depth)
+                    paged_depth=depth, sampling=sampling, seeds=seeds)
                 return last, cache["pool"], toks
 
             fn = jax.jit(body)
             self._decode_fns[("paged", steps)] = fn
         return fn
+
+    def _first_token(self, logits, seed: int, pos: int) -> int:
+        """The admission token, sampled with the same fused-epilogue logic
+        (and the same (seed, position) key) the decode chunks use — or
+        host argmax when greedy."""
+        s = self.sampling
+        if s is None or s.temperature <= 0.0:
+            return int(jnp.argmax(logits[0]))
+        fn = self._decode_fns.get("first")
+        if fn is None:
+            def body(logits, seed, pos):
+                keys = policies.fold_keys(seed[None], pos[None])
+                return policies.sample_logits(
+                    logits, keys, temperature=s.temperature,
+                    top_k=s.top_k, top_p=s.top_p)[0]
+
+            fn = jax.jit(body)
+            self._decode_fns["first"] = fn
+        return int(fn(logits, jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(pos, jnp.int32)))
 
     def _free_slot_blocks(self, slot: int) -> None:
         ids = self._slot_blocks[slot]
@@ -1016,6 +1061,9 @@ class BucketedEngine(_SlotDecodeMixin):
             self.prefill_cache = PrefillCompileCache(self._build_prefill)
         self._decode_fns: dict = {}
         self._insert_fn = jax.jit(tf.insert_request_cache)
+        self.sampling = None  # the deprecated baseline decodes greedily
+        self._seeds_h = np.zeros(num_slots, np.int32)
+        self.stats: dict = {}
 
     # -- compile-cache bodies ------------------------------------------------
     def _build_prefill(self, policy: str, padded: bool):
@@ -1090,6 +1138,8 @@ class BucketedEngine(_SlotDecodeMixin):
         active = np.zeros(self.num_slots, bool)
         remaining = np.zeros(self.num_slots, np.int64)
         last_emit = np.zeros(self.num_slots, np.float64)
+        self.stats = {"decode_chunks": 0, "decode_steps": 0,
+                      "decode_time_s": 0.0, "decode_path": "dense"}
 
         while sched.has_work():
             # admission: fill freed slots from the queue, one bucket group
@@ -1106,9 +1156,15 @@ class BucketedEngine(_SlotDecodeMixin):
             if active.any():
                 steps = self._pick_chunk(remaining, active)
                 fn = self._decode_fn(steps)
+                t_dec = time.perf_counter()
                 tok, live, toks = fn(self.params, tok, live,
-                                     jnp.asarray(active))
-                self._collect(np.asarray(toks), steps, sched, active,
+                                     jnp.asarray(active),
+                                     jnp.asarray(self._seeds_h))
+                toks_np = np.asarray(toks)  # device sync: tokens landed
+                self.stats["decode_chunks"] += 1
+                self.stats["decode_steps"] += steps
+                self.stats["decode_time_s"] += time.perf_counter() - t_dec
+                self._collect(toks_np, steps, sched, active,
                               remaining, last_emit, t0)
             else:
                 nxt = sched.next_arrival()
