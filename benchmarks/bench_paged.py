@@ -42,11 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import (decode_step_stats, make_poisson_trace,
+                               ttft_stats)
 from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import ContinuousEngine, KVBlockPool, Request
+from repro.serving import ContinuousEngine, KVBlockPool
 
 BUDGET = 64  # eviction budget (large vs the short prompts: kept = prompt)
 MAX_NEW = 40  # long decodes keep slots busy -> dense is slot-bound
@@ -62,16 +64,10 @@ CONC_RATIO = 1.5
 TTFT_NOISE = 1.25  # CPU dispatch-noise guard on the "no worse" gate
 
 
-def make_trace(seed: int, vocab: int) -> list[Request]:
-    rng = np.random.default_rng(seed)
-    w = 1.0 / np.arange(1, len(PROMPT_LENS) + 1)
-    w /= w.sum()
-    lens = rng.choice(np.asarray(PROMPT_LENS), size=N_REQUESTS, p=w)
-    arrivals = np.cumsum(rng.exponential(ARRIVAL_GAP_S, N_REQUESTS))
-    return [Request(uid=i,
-                    prompt=rng.integers(0, vocab, int(n)).astype(np.int32),
-                    max_new_tokens=MAX_NEW, arrival_s=float(a))
-            for i, (n, a) in enumerate(zip(lens, arrivals))]
+def make_trace(seed: int, vocab: int):
+    return make_poisson_trace(N_REQUESTS, vocab, PROMPT_LENS, seed=seed,
+                              max_new=MAX_NEW, gap_s=ARRIVAL_GAP_S,
+                              zipf=True)
 
 
 def _byte_budget(cfg, evict) -> tuple[int, int]:
@@ -111,19 +107,13 @@ def bench(seed: int = 0, trials: int = 3):
     for _ in range(trials):
         for name, eng in engines.items():
             done = eng.run(make_trace(seed, cfg.vocab_size))
-            ttft = np.array([r.ttft_s for r in done])
-            steps = max(eng.stats.get("decode_steps", 0), 1)
             m = {
                 "max_concurrency": eng.stats["max_concurrency"],
-                "ttft_p95_ms": 1e3 * float(np.percentile(ttft, 95)),
-                "ttft_mean_ms": 1e3 * float(ttft.mean()),
                 "kv_bytes": eng.kv_device_bytes(),
                 "preemptions": eng.stats.get("preemptions", 0),
-                # per-token decode step cost + which dispatch tier served it
-                "decode_step_ms":
-                    1e3 * eng.stats.get("decode_time_s", 0.0) / steps,
-                "decode_path": eng.stats.get("decode_path", "dense"),
             }
+            m.update(ttft_stats(done))
+            m.update(decode_step_stats(eng))
             best = out.get(name)
             if best is None or m["ttft_p95_ms"] < best["ttft_p95_ms"]:
                 m["max_concurrency"] = max(

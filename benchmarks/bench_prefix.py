@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import clone_requests, ttft_stats
 from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.data.synthetic import make_prefix_trace
@@ -53,8 +54,8 @@ def _requests(cfg, *, n_requests, seed):
             for i, (p, a) in enumerate(trace)]
 
 
-def _clone(reqs):
-    return [r.clone() for r in reqs]
+_clone = clone_requests
+_ttft = ttft_stats
 
 
 def _engine(cfg, params, *, prefix_cache=None, max_len):
@@ -65,10 +66,6 @@ def _engine(cfg, params, *, prefix_cache=None, max_len):
         prefix_cache=prefix_cache)
 
 
-def _ttft(done):
-    t = np.array([r.ttft_s for r in done])
-    return {"ttft_mean_ms": 1e3 * t.mean(), "ttft_p95_ms":
-            1e3 * np.percentile(t, 95)}
 
 
 def _chunk_step_time(cfg, params, eng, reps=20):

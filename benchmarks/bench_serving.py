@@ -38,12 +38,13 @@ import warnings
 import jax
 import numpy as np
 
+from benchmarks.common import (clone_requests, decode_step_stats,
+                               make_poisson_trace, ttft_stats)
 from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import (BucketedEngine, ContinuousEngine, Request,
-                           ServingEngine)
+from repro.serving import BucketedEngine, ContinuousEngine, ServingEngine
 
 # Heterogeneous short lengths (9 distinct values over 3 compile buckets).
 PROMPT_LENS = (17, 24, 31, 41, 48, 60, 75, 90, 120)
@@ -58,8 +59,6 @@ def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int,
                n_long: int = 2):
     """Poisson arrivals, uniform mix over PROMPT_LENS; with ``long_tail``,
     ``n_long`` prompts of ``long_len`` tokens are planted mid-trace."""
-    rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
     long_uids = set()
     if long_tail and n_long:
         assert n_long <= max(n_requests // 3, 1), \
@@ -69,29 +68,21 @@ def make_trace(n_requests: int, rate_hz: float, seed: int, vocab: int,
         # silently shrink the tail)
         start = n_requests // 3
         long_uids = set(range(start, start + n_long))
-    reqs = []
-    for i in range(n_requests):
-        n = long_len if i in long_uids else int(rng.choice(PROMPT_LENS))
-        reqs.append(Request(
-            uid=i, prompt=rng.integers(0, vocab, n).astype(np.int32),
-            max_new_tokens=MAX_NEW, arrival_s=float(arrivals[i])))
-    return reqs
+    return make_poisson_trace(n_requests, vocab, PROMPT_LENS, seed=seed,
+                              max_new=MAX_NEW, rate_hz=rate_hz,
+                              long_uids=long_uids, long_len=long_len)
 
 
-def _clone(reqs):
-    return [r.clone() for r in reqs]
+_clone = clone_requests
 
 
 def _metrics(reqs, wall, *, tracks_gaps: bool = True):
     toks = sum(len(r.out_tokens) for r in reqs)
-    ttft = np.array([r.ttft_s for r in reqs])
     tpot = np.array([r.tpot_s for r in reqs if r.tpot_s > 0])
     gaps = np.array([r.max_gap_s for r in reqs])
-    return {
+    m = {
         "wall_s": wall,
         "tok_per_s": toks / wall,
-        "ttft_mean_ms": 1e3 * ttft.mean(),
-        "ttft_p95_ms": 1e3 * np.percentile(ttft, 95),
         "tpot_mean_ms": 1e3 * tpot.mean() if len(tpot) else 0.0,
         "tpot_p95_ms": 1e3 * np.percentile(tpot, 95) if len(tpot) else 0.0,
         # nan (printed as n/a) when the engine has no per-chunk emission
@@ -100,6 +91,8 @@ def _metrics(reqs, wall, *, tracks_gaps: bool = True):
         "stall_max_ms": (1e3 * gaps.max() if len(gaps) and tracks_gaps
                          else float("nan")),
     }
+    m.update(ttft_stats(reqs))
+    return m
 
 
 def run_lockstep(eng, reqs, *, max_batch=4):
@@ -134,16 +127,6 @@ def run_lockstep(eng, reqs, *, max_batch=4):
     return m
 
 
-def _decode_step_stats(eng) -> dict:
-    """Per-token decode step wall cost and the dispatch tier that served
-    it (kernel / gather / fallback / dense) — pulled from engine stats."""
-    steps = max(eng.stats.get("decode_steps", 0), 1)
-    return {
-        "decode_step_ms": 1e3 * eng.stats.get("decode_time_s", 0.0) / steps,
-        "decode_path": eng.stats.get("decode_path", "dense"),
-    }
-
-
 def run_bucketed(eng, reqs):
     t0 = time.perf_counter()
     done = eng.run(reqs)
@@ -153,7 +136,7 @@ def run_bucketed(eng, reqs):
                      + len(eng._decode_fns))
     m["compile_cache"] = eng.prefill_cache.stats()
     m["kv_bytes_peak"] = eng.kv_device_bytes()
-    m.update(_decode_step_stats(eng))
+    m.update(decode_step_stats(eng))
     return m
 
 
@@ -167,7 +150,10 @@ def run_chunked(eng, reqs):
     m["compile_cache"] = eng.chunk_cache.stats()
     m["engine_stats"] = dict(eng.stats)
     m["kv_bytes_peak"] = eng.kv_device_bytes()
-    m.update(_decode_step_stats(eng))
+    # the serving mesh (None = single-device): BENCH_*.json rows must say
+    # which device topology produced their numbers
+    m["mesh"] = eng.stats.get("mesh")
+    m.update(decode_step_stats(eng))
     return m
 
 
@@ -240,6 +226,8 @@ def run(report):
         # trajectory across PRs, not just latency/throughput
         report(f"serving/{name}_kv_bytes_peak", None,
                f"{m['kv_bytes_peak']}")
+    report("serving/chunked_mesh", None,
+           str(res["chunked"]["mesh"] or "single-device"))
     ok, verdict = _verdict(res)
     report("serving/longtail_verdict", None, "pass" if ok else "fail")
     speed = (res["chunked"]["tok_per_s"]

@@ -21,7 +21,11 @@ Gated verdicts:
 * ``kernels/paged_decode_verdict`` — the gather-free paged flash-decode
   path stays within the analytic HBM roofline budget (touched bytes
   <= ideal/0.85) at every (B, depth, block_size) point *and* measures
-  strictly faster than the dense-gather oracle wherever depth >= 2k.
+  strictly faster than the dense-gather oracle wherever depth >= 2k;
+* ``sharded/scaling_verdict``  — on a forced 8-device host mesh the
+  tensor-parallel paged engine's per-shard KV pool bytes scale exactly
+  as total/model at model = {2, 4} and every width emits bit-identical
+  tokens to single-device serving.
 
 The JSON artifact carries every reported benchmark row plus the verdict
 map, so a red gate links straight to the number that moved.
@@ -36,7 +40,8 @@ import time
 
 # every row name ending in ``_verdict`` gates the job
 SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving",
-          "benchmarks.bench_prefix", "benchmarks.bench_paged")
+          "benchmarks.bench_prefix", "benchmarks.bench_paged",
+          "benchmarks.bench_sharded")
 
 
 def main() -> None:

@@ -1,7 +1,9 @@
 """Shared benchmark scaffolding: a small trained model cached across
 benchmark modules (training once keeps `python -m benchmarks.run` tractable
-on the 1-core CPU container), timing helpers, and metric utilities
-(recall@k, Kendall's τ — the paper's Table 8 metrics)."""
+on the 1-core CPU container), timing helpers, metric utilities
+(recall@k, Kendall's τ — the paper's Table 8 metrics), and the serving
+trace/report helpers the serving benches share (Poisson/Zipf request
+traces, TTFT rows, decode-step stats)."""
 
 from __future__ import annotations
 
@@ -110,3 +112,71 @@ def eval_batch(cfg, seed: int = 1234, batch: int = BATCH):
     x = jnp.asarray(b.x)
     xy = jnp.concatenate([x, jnp.asarray(b.y)], axis=1)
     return b, x, xy
+
+
+# --- serving-bench trace + report helpers (shared by bench_serving /
+# bench_paged / bench_prefix / bench_sharded) ---
+
+
+def make_poisson_trace(n_requests: int, vocab: int, prompt_lens, *,
+                       seed: int, max_new: int, rate_hz: float = None,
+                       gap_s: float = None, zipf: bool = False,
+                       long_uids=frozenset(), long_len: int = 8192):
+    """Poisson-arrival random-token ``Request`` trace.
+
+    Prompt lengths are drawn from ``prompt_lens`` — uniformly, or
+    Zipf-weighted by rank (``zipf=True``: mostly short, a tail of longer
+    ones).  ``long_uids`` plants ``long_len``-token prompts at those uids
+    (the long-tail shape that breaks bucketed serving).  Arrival gaps are
+    exponential with mean ``1/rate_hz`` (or ``gap_s`` directly).
+    """
+    from repro.serving import Request
+
+    assert (rate_hz is None) != (gap_s is None), \
+        "pass exactly one of rate_hz / gap_s"
+    rng = np.random.default_rng(seed)
+    scale = gap_s if gap_s is not None else 1.0 / rate_hz
+    arrivals = np.cumsum(rng.exponential(scale, n_requests))
+    lens_arr = np.asarray(prompt_lens)
+    if zipf:
+        w = 1.0 / np.arange(1, len(lens_arr) + 1)
+        lens = rng.choice(lens_arr, size=n_requests, p=w / w.sum())
+    else:
+        lens = rng.choice(lens_arr, size=n_requests)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(
+                    0, vocab,
+                    long_len if i in long_uids else int(lens[i])
+                ).astype(np.int32),
+                max_new_tokens=max_new, arrival_s=float(arrivals[i]))
+        for i in range(n_requests)
+    ]
+
+
+def clone_requests(reqs):
+    return [r.clone() for r in reqs]
+
+
+def ttft_stats(done) -> dict:
+    """Mean / p95 time-to-first-token over finished requests (ms)."""
+    t = np.array([r.ttft_s for r in done])
+    return {"ttft_mean_ms": 1e3 * float(t.mean()),
+            "ttft_p95_ms": 1e3 * float(np.percentile(t, 95))}
+
+
+def decode_step_stats(eng) -> dict:
+    """Per-token decode step wall cost and the dispatch tier that served
+    it (kernel / gather / fallback / dense) — pulled from engine stats."""
+    steps = max(eng.stats.get("decode_steps", 0), 1)
+    return {
+        "decode_step_ms": 1e3 * eng.stats.get("decode_time_s", 0.0) / steps,
+        "decode_path": eng.stats.get("decode_path", "dense"),
+    }
+
+
+def report_rows(report, prefix: str, rows: dict):
+    """Emit ``{prefix}/{key} -> value`` rows through a ci_smoke/run
+    ``report`` callback (values pre-formatted strings)."""
+    for key, val in rows.items():
+        report(f"{prefix}/{key}", None, val)

@@ -183,6 +183,43 @@ def cache_specs(cfg: ModelConfig, mesh, batch: int, capacity: int,
     return specs
 
 
+def pool_specs(cfg: ModelConfig, mesh) -> Optional[dict]:
+    """Sharding for the paged KV block pool (``serving/kv_pool.py``).
+
+    The pool arrays are ``(L, num_blocks, block_size, KV, hd)`` K/V plus
+    ``(L, num_blocks, block_size, KV)`` pos/mask; only the kv-head dim is
+    sharded, on "model" — blocks are *whole* on every shard, so the host
+    free-list allocator and the per-request block tables stay replicated
+    and allocation logic is untouched.  Returns None when the mesh has no
+    "model" axis or kv heads don't divide it (pool stays single-device /
+    replicated)."""
+    a = cfg.attn
+    if a is None or mesh is None:
+        return None
+    if "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    if not _div(a.num_kv_heads, mesh.shape["model"]):
+        return None
+    return {
+        "k": P(None, None, None, "model", None),
+        "v": P(None, None, None, "model", None),
+        "pos": P(None, None, None, "model"),
+        "mask": P(None, None, None, "model"),
+    }
+
+
+def mesh_signature(mesh) -> Optional[tuple]:
+    """Hashable mesh identity for compile-cache keys: ``(("data", 4),
+    ("model", 2))`` — None for no mesh or an all-1 (trivial) mesh, so
+    meshless cache keys keep their historical shape."""
+    if mesh is None:
+        return None
+    sig = tuple((n, int(mesh.shape[n])) for n in mesh.axis_names)
+    if all(s == 1 for _, s in sig):
+        return None
+    return sig
+
+
 def with_sharding(shapes: Any, specs: Any, mesh) -> Any:
     """Attach NamedShardings to a ShapeDtypeStruct tree."""
     return jax.tree.map(

@@ -117,6 +117,7 @@ def decode_one(
     paged_depth: Optional[int] = None,  # static depth of a paged cache
     sampling: Optional[Sampling] = None,  # None / temperature 0 = greedy
     seeds: Optional[jnp.ndarray] = None,  # (B,) per-request sampling seeds
+    mesh=None,  # serving mesh: per-shard paged decode attention
 ) -> tuple[jnp.ndarray, dict]:
     """One decode step.  Returns (next_token (B, 1), new cache).
 
@@ -135,7 +136,7 @@ def decode_one(
     """
     paged = "pool" in cache
     logits, new_cache = tf.decode_step(
-        params, cfg, token, cache,
+        params, cfg, token, cache, mesh=mesh,
         active=active if paged else None, paged_depth=paged_depth)
     if sampling is not None and sampling.temperature > 0.0:
         assert seeds is not None, "sampling needs per-request seeds"
@@ -188,6 +189,7 @@ def decode_chunk(
     paged_depth: Optional[int] = None,
     sampling: Optional[Sampling] = None,
     seeds: Optional[jnp.ndarray] = None,  # (B,) per-request sampling seeds
+    mesh=None,  # serving mesh: per-shard paged decode attention
 ) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
     """``steps`` decode steps *after* ``token``.  Returns (last (B, 1), cache,
     new tokens (B, steps)).  Unlike ``greedy_decode`` the emitted tokens
@@ -201,7 +203,7 @@ def decode_chunk(
         tok, cache = carry
         nxt, cache = decode_one(params, cfg, tok, cache, active=active,
                                 paged_depth=paged_depth, sampling=sampling,
-                                seeds=seeds)
+                                seeds=seeds, mesh=mesh)
         return (nxt, cache), nxt[:, 0]
 
     (last, cache), toks = jax.lax.scan(

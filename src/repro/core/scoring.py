@@ -252,6 +252,7 @@ def finalize_layer_scores(
     pool_kernel: int,
     window_size: int = 32,
     window=None,
+    smesh=None,  # model_shard_mesh-vetted mesh: per-shard head scoring
 ) -> jnp.ndarray:
     """Eviction-ready scores (B, KV, K) at prompt end, mirroring the
     monolithic pipeline exactly: GQA-reduce, max-pool over the *scored*
@@ -271,8 +272,10 @@ def finalize_layer_scores(
         # the masked streaming primitive scores the rolled window queries
         # over the whole buffer (traced observation base ``boundary``);
         # mean over the W rows == the monolithic sum / W
-        s_qh = ops.lookahead_score(
-            qbuf_l, k_buf, K, q_offset=boundary, window=window,
+        from repro.models.attention import sharded_lookahead_score
+
+        s_qh = sharded_lookahead_score(
+            qbuf_l, k_buf, K, q_offset=boundary, window=window, smesh=smesh,
         )
     else:  # final-observation policies
         assert obs_masses_l is not None, f"{policy} needs an observation pass"

@@ -57,6 +57,10 @@ def main():
                          "caches, the old behavior)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="rows per KV pool block (with --kv-pool-mb)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel shards: serve one sharded model "
+                         "over a (data, model) device mesh (continuous "
+                         "engine; 1 = single-device, the old behavior)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -83,6 +87,24 @@ def main():
         print("note: --kv-pool-mb requires the chunked continuous engine "
               "(--continuous with a streamable policy); ignoring it")
         args.kv_pool_mb = 0
+    mesh = None
+    if args.mesh_model > 1:
+        a = cfg.attn
+        if not streamable:
+            print("note: --mesh-model requires the chunked continuous "
+                  "engine (--continuous with a streamable policy); "
+                  "ignoring it")
+        elif (a is None or a.num_kv_heads % args.mesh_model
+              or a.num_heads % args.mesh_model):
+            heads = None if a is None else (a.num_heads, a.num_kv_heads)
+            print(f"note: --mesh-model {args.mesh_model} does not divide "
+                  f"{args.arch}'s (q, kv) heads {heads}; serving "
+                  "single-device")
+        else:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(model=args.mesh_model)
+            print(f"mesh: {dict(mesh.shape)} over "
+                  f"{len(jax.devices())} devices")
     if args.continuous:
         if args.policy in policies.MULTI_PASS or args.policy == "full":
             # draft-based baselines and 'full' cannot stream prefill chunks;
@@ -98,7 +120,7 @@ def main():
             kv_pool = None
             if args.kv_pool_mb:
                 kv_pool = KVBlockPool(cfg, block_size=args.kv_block_size,
-                                      pool_mb=args.kv_pool_mb)
+                                      pool_mb=args.kv_pool_mb, mesh=mesh)
             prefix_cache = None
             if args.prefix_cache_mb:
                 # with a pool, cached prefixes pin pool blocks (one
@@ -113,7 +135,7 @@ def main():
                 lkv_params=lkv, num_slots=args.slots, chunk=args.chunk,
                 max_context=max(args.n_in, args.chunk),
                 max_new_tokens=args.max_new, eos_id=-1,
-                prefix_cache=prefix_cache, kv_pool=kv_pool)
+                prefix_cache=prefix_cache, kv_pool=kv_pool, mesh=mesh)
         shared = (args.shared_prefix // args.chunk) * args.chunk
         system = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
         lens = rng.integers(args.n_in // 2, args.n_in + 1, args.requests)

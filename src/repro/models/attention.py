@@ -71,15 +71,21 @@ def qkv(
     """Project + rotate.  Returns q (B,S,H,hd), k/v (B,S,KV,hd)."""
     B, S, _ = h.shape
     lm = inp.lookahead_mask
-    q = linear(h, p["wq"], p.get("bq"), lora=_lora_for(lora, "wq"),
-               lora_mask=lm, lora_scale=lora_scale)
-    k = linear(h, p["wk"], p.get("bk"), lora=_lora_for(lora, "wk"),
-               lora_mask=lm, lora_scale=lora_scale)
-    v = linear(h, p["wv"], p.get("bv"), lora=_lora_for(lora, "wv"),
-               lora_mask=lm, lora_scale=lora_scale)
+    smesh = model_shard_mesh(inp.mesh, a)
+    if smesh is not None:
+        q, k, v = _sharded_qkv_project(p, h, lm, lora, lora_scale, smesh)
+    else:
+        q = linear(h, p["wq"], p.get("bq"), lora=_lora_for(lora, "wq"),
+                   lora_mask=lm, lora_scale=lora_scale)
+        k = linear(h, p["wk"], p.get("bk"), lora=_lora_for(lora, "wk"),
+                   lora_mask=lm, lora_scale=lora_scale)
+        v = linear(h, p["wv"], p.get("bv"), lora=_lora_for(lora, "wv"),
+                   lora_mask=lm, lora_scale=lora_scale)
     q = q.reshape(B, S, a.num_heads, a.head_dim)
     k = k.reshape(B, S, a.num_kv_heads, a.head_dim)
     v = v.reshape(B, S, a.num_kv_heads, a.head_dim)
+    q, k, v = (pin_heads(q, smesh), pin_heads(k, smesh),
+               pin_heads(v, smesh))
     if rotary:
         if a.mrope and inp.mrope_positions is not None:
             q = rope.apply_mrope(q, inp.mrope_positions, a.rope_theta, a.mrope_sections)
@@ -159,7 +165,12 @@ def chunk_prefill_attention(
         v_buf, v.astype(v_buf.dtype), (0, q_offset, 0, 0))
     window = layer_window(a, is_global)
     masses = None
-    if score_masses:
+    smesh = model_shard_mesh(inp.mesh, a)
+    if smesh is not None:
+        out, masses = _sharded_chunk_attention(
+            q, k_buf, v_buf, q_offset=q_offset, window=window,
+            score_masses=score_masses, n_total=n_total, mesh=smesh)
+    elif score_masses:
         out, masses = ops.chunk_attention(
             q, k_buf, v_buf, q_offset=q_offset, window=window,
             score_masses=True, n_total=n_total)
@@ -168,8 +179,8 @@ def chunk_prefill_attention(
                                   window=window)
     B, C = h.shape[:2]
     out = out.reshape(B, C, a.q_dim)
-    out = linear(out, p["wo"], lora=_lora_for(lora, "wo"),
-                 lora_mask=inp.lookahead_mask, lora_scale=lora_scale)
+    out = sharded_wo_linear(out, p["wo"], smesh, lora=_lora_for(lora, "wo"),
+                            lm=inp.lookahead_mask, ls=lora_scale)
     return out, q, k_buf, v_buf, masses
 
 
@@ -195,6 +206,322 @@ def layer_window(a: AttentionConfig, is_global) -> "int | jnp.ndarray | None":
     if a.sliding_window > 0:
         return a.sliding_window
     return None
+
+
+# -- tensor-parallel kernel dispatch ----------------------------------------
+#
+# With a ("data", "model") serving mesh, attention runs per model shard
+# over its local head slice: contiguous kv-head shards own exactly their q
+# heads' GQA groups (H = G·KV keeps group boundaries shard-aligned), and
+# every per-head reduction sweeps the full sequence in the *same order* as
+# the unsharded call — so per-head outputs, the fused score-mass partials,
+# and the eviction kept-sets derived from them are bit-identical to
+# single-device serving, with no collective inside the attention block
+# (shards combine downstream, in the row-sharded ``wo`` matmul).  Pallas
+# kernels have no GSPMD partition rule, so the forced-Pallas dispatch
+# *requires* these shard_map wrappers to stay on the kernel path.
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version shim: ``jax.shard_map(check_vma=)`` landed after 0.4.x,
+    where the API lives at ``jax.experimental.shard_map`` with the
+    replication check spelled ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def pin_activations(h, mesh):
+    """Pin a scan-carried activation to batch-only sharding (feature dim
+    unsharded).  Left to itself, GSPMD may feature-shard the carry between
+    layers to suit the row-sharded ``wo``/``w_down`` matmuls — turning
+    every ``rms_norm`` mean into a psum of per-shard partials whose
+    different summation order perturbs activations by bf16 ulps, and with
+    them the eviction scores sharded serving promises to keep bit-exact."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return h
+    if int(mesh.shape["model"]) == 1:
+        return h
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    bspec = _batch_spec(mesh, h.shape[0])
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(mesh, P(bspec, *(None,) * (h.ndim - 1))))
+
+
+def pin_heads(x, smesh):
+    """Pin a (B, S, heads, hd) projection to head-sharded on "model" — the
+    canonical Megatron column split.  Unpinned, GSPMD is free to realize
+    the projection as a contraction-split dot (psum of per-shard partial
+    sums over d_model), whose different summation association perturbs the
+    result by bf16 ulps vs the single-device program."""
+    if smesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(smesh, P(None, None, "model", None)))
+
+
+def _sharded_qkv_project(p, h, lm, lora, lora_scale, smesh):
+    """q/k/v projections column-parallel under shard_map.
+
+    GSPMD is free to realize ``h @ w`` as a contraction-split dot (psum of
+    per-shard partials over d_model) whose summation association differs
+    from the single-device dot by bf16 ulps — and
+    ``with_sharding_constraint`` pins layouts, not dot algorithms, so it
+    cannot forbid that choice (observed: the observation pass's
+    LoRA-bearing k projection drifts inside ``lax.scan`` even with its
+    inputs and outputs pinned).  Under shard_map each shard computes its
+    local head columns with the full d_model contraction in the
+    single-device order, making the projection bit-exact by construction.
+    The LoRA delta (observation rows) rides along: ``xm @ A`` is computed
+    in full on every shard (A is replicated and rank-tiny) and ``@ B``
+    takes the local column slice.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    names = ("wq", "wk", "wv")
+    ws = {n: p[n] for n in names}
+    bs = {n: p["b" + n[1:]] for n in names
+          if p.get("b" + n[1:]) is not None}
+    lo = {n: lora[n] for n in names
+          if lora is not None and lora.get(n) is not None}
+    w_specs = {n: P(None, "model") for n in ws}
+    b_specs = {n: P("model") for n in bs}
+    lo_specs = {n: {"a": P(None, None), "b": P(None, "model")} for n in lo}
+    bspec = _batch_spec(smesh, h.shape[0])
+    have_lm = lm is not None
+
+    def local(hh, wsl, bsl, losl, *rest):
+        lml = rest[0] if have_lm else None
+        outs = tuple(
+            linear(hh, wsl[n], bsl.get(n), lora=losl.get(n),
+                   lora_mask=lml, lora_scale=lora_scale)
+            for n in names)
+        return outs
+
+    arrs = [h, ws, bs, lo]
+    specs = [P(bspec, None, None), w_specs, b_specs, lo_specs]
+    if have_lm:
+        arrs.append(lm)
+        specs.append(P(bspec, None, None))
+    cspec = P(bspec, None, "model")
+    return _shard_map(local, smesh, tuple(specs), (cspec,) * 3)(*arrs)
+
+
+def replicated_apply(fn, smesh, *args):
+    """Run ``fn(*args)`` identically on every shard under shard_map.
+
+    The escape hatch for small computations that must be bit-exact vs the
+    single-device program but whose dots GSPMD may re-associate (the
+    lookahead-LoRA deltas on the observation rows): inside shard_map there
+    is no partitioner, so each shard gathers the operands (declared fully
+    replicated) and performs the complete single-device computation in the
+    single-device order.  Redundant across shards — reserve it for
+    observation-sized work, not the serving hot path.
+    """
+    if smesh is None:
+        return fn(*args)
+    from jax.sharding import PartitionSpec as P
+
+    in_specs = tuple(P() for _ in args)
+    return _shard_map(lambda *a: fn(*a), smesh, in_specs, P())(*args)
+
+
+def sharded_wo_linear(out_flat, w, smesh, *, lora=None, lm=None, ls=1.0):
+    """Attention out-projection with the contraction in single-device order.
+
+    ``out @ wo`` contracts over the head-sharded dim, and GSPMD's
+    realization of that dot is shape-dependent: at some (chunk, length)
+    points it psum-splits the contraction, re-associating the bf16 sums
+    vs the single-device program.  Here the head-sharded attention output
+    is all-gathered *inside* shard_map, then each shard computes the full
+    contraction for its local slice of output columns (column-parallel on
+    d_model) — no psum ever touches the reduction, so bits match the
+    single-device matmul by construction.  The LoRA delta (observation
+    rows) follows the same pattern: full ``xm @ A``, column-sliced
+    ``@ B``.
+    """
+    if smesh is None:
+        return linear(out_flat, w, lora=lora, lora_mask=lm, lora_scale=ls)
+    if w.shape[-1] % int(smesh.shape["model"]):
+        return replicated_apply(
+            lambda o, wl, lo, lml: linear(o, wl, lora=lo, lora_mask=lml,
+                                          lora_scale=ls),
+            smesh, out_flat, w, lora, lm)
+    from jax.sharding import PartitionSpec as P
+
+    bspec = _batch_spec(smesh, out_flat.shape[0])
+    have_lora = lora is not None and lm is not None
+
+    def local(o, wl, *rest):
+        of = jax.lax.all_gather(o, "model", axis=2, tiled=True)
+        lo = rest[0] if have_lora else None
+        lml = rest[1] if have_lora else None
+        return linear(of, wl, lora=lo, lora_mask=lml, lora_scale=ls)
+
+    arrs = [out_flat, w]
+    specs = [P(bspec, None, "model"), P(None, "model")]
+    if have_lora:
+        arrs += [lora, lm]
+        specs += [{"a": P(None, None), "b": P(None, "model")},
+                  P(bspec, None, None)]
+    return _shard_map(local, smesh, tuple(specs),
+                      P(bspec, None, "model"))(*arrs)
+
+
+def model_shard_mesh(mesh, a: AttentionConfig):
+    """The mesh when per-shard head dispatch applies, else None.
+
+    kv heads must divide the "model" axis (q heads then divide too, since
+    ``H = G · KV``); anything else degrades to the unsharded call — the
+    same replication fallback ``param_specs`` uses for the projections.
+    """
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return None
+    msize = int(mesh.shape["model"])
+    if msize == 1 or a.num_kv_heads % msize or a.num_heads % msize:
+        return None
+    return mesh
+
+
+def _batch_spec(mesh, B: int):
+    """Shard the batch over the data axes when it divides them."""
+    dp = tuple(n for n in mesh.axis_names if n != "model")
+    total = 1
+    for n in dp:
+        total *= int(mesh.shape[n])
+    return dp if (dp and B % total == 0) else None
+
+
+def _sharded_chunk_attention(q, k_buf, v_buf, *, q_offset, window,
+                             score_masses, n_total, mesh):
+    """``ops.chunk_attention`` per model shard over local head slices."""
+    from jax.sharding import PartitionSpec as P
+
+    bspec = _batch_spec(mesh, q.shape[0])
+    hspec = P(bspec, None, "model", None)  # heads/kv-heads on axis 2
+    traced_window = window is not None and not isinstance(window, int)
+
+    arrs = [q, k_buf, v_buf, jnp.asarray(q_offset, jnp.int32)]
+    specs = [hspec, hspec, hspec, P()]
+    if traced_window:
+        arrs.append(jnp.asarray(window, jnp.int32))
+        specs.append(P())
+    if n_total is not None:
+        arrs.append(jnp.asarray(n_total, jnp.int32))
+        specs.append(P())
+
+    def local(qv, kv, vv, off, *rest):
+        win = rest[0] if traced_window else window
+        if not score_masses:
+            return (ops.chunk_attention(qv, kv, vv, q_offset=off,
+                                        window=win),)
+        nt = rest[-1] if n_total is not None else None
+        return ops.chunk_attention(qv, kv, vv, q_offset=off, window=win,
+                                   score_masses=True, n_total=nt)
+
+    out_specs = (hspec, P(bspec, "model", None)) if score_masses else (hspec,)
+    res = _shard_map(local, mesh, tuple(specs), out_specs)(*arrs)
+    return (res[0], res[1]) if score_masses else (res[0], None)
+
+
+def sharded_lookahead_score(q_obs, k_buf, n_prompt, *, q_offset, window,
+                            row_valid=None, smesh=None):
+    """``ops.lookahead_score`` per model shard (observation-pass scoring).
+
+    Scores are per q-head, so each shard scores its local heads over the
+    full key sequence — same reduction order as unsharded, no collective.
+    ``smesh`` is a mesh already vetted by ``model_shard_mesh`` (None runs
+    the plain call).
+    """
+    if smesh is None:
+        return ops.lookahead_score(q_obs, k_buf, n_prompt, q_offset=q_offset,
+                                   window=window, row_valid=row_valid)
+    from jax.sharding import PartitionSpec as P
+
+    bspec = _batch_spec(smesh, q_obs.shape[0])
+    hspec = P(bspec, None, "model", None)
+    traced_window = window is not None and not isinstance(window, int)
+    traced_offset = q_offset is not None and not isinstance(q_offset, int)
+
+    arrs = [q_obs, k_buf]
+    specs = [hspec, hspec]
+    if traced_offset:
+        arrs.append(jnp.asarray(q_offset, jnp.int32))
+        specs.append(P())
+    if traced_window:
+        arrs.append(jnp.asarray(window, jnp.int32))
+        specs.append(P())
+    if row_valid is not None:
+        arrs.append(row_valid)
+        specs.append(P(bspec, None))
+
+    def local(qv, kv, *rest):
+        i = 0
+        off = q_offset
+        if traced_offset:
+            off = rest[i]
+            i += 1
+        win = window
+        if traced_window:
+            win = rest[i]
+            i += 1
+        rv = rest[i] if row_valid is not None else None
+        return ops.lookahead_score(qv, kv, n_prompt, q_offset=off,
+                                   window=win, row_valid=rv)
+
+    return _shard_map(local, smesh, tuple(specs),
+                      P(bspec, "model", None))(*arrs)
+
+
+def _sharded_paged_decode(q1, k1, v1, pool, table, pb, off, write_ok,
+                          new_pos_kv, new_pos, *, window, depth, mesh):
+    """Paged append + ``ops.paged_decode_attention`` per model shard.
+
+    The batch stays *replicated* here (no data-axis sharding): the pool
+    has no batch dim, so every data rank must apply the full batch's
+    scatter to keep its pool replica identical — sharding the batch would
+    silently fork the replicas (check_vma=False cannot catch it).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    kvspec = P(None, None, "model", None)  # pool k/v (N, bs, KV, hd)
+    mspec = P(None, None, "model")  # pool pos/mask (N, bs, KV)
+    traced_window = window is not None and not isinstance(window, int)
+
+    arrs = [q1, k1, v1, pool["k"], pool["v"], pool["pos"], pool["mask"],
+            table, pb, off, write_ok, new_pos_kv, new_pos]
+    specs = [P(None, "model", None), P(None, "model", None),
+             P(None, "model", None), kvspec, kvspec, mspec, mspec,
+             P(None, None), P(None), P(None), P(None),
+             P(None, "model"), P(None)]
+    if traced_window:
+        arrs.append(jnp.asarray(window, jnp.int32))
+        specs.append(P())
+
+    def local(qv, kn, vn, pk, pv, ppos, pmask, tab, pbv, offv, wok,
+              npkv, np1, *rest):
+        win = rest[0] if traced_window else window
+        kvl = kn.shape[-2]
+        pk = pk.at[pbv, offv].set(kn.astype(pk.dtype))
+        pv = pv.at[pbv, offv].set(vn.astype(pv.dtype))
+        ppos = ppos.at[pbv, offv].set(npkv)
+        pmask = pmask.at[pbv, offv].set(
+            jnp.broadcast_to(wok[:, None], (wok.shape[0], kvl)))
+        out = ops.paged_decode_attention(
+            qv, pk, pv, pmask, tab, pos_pool=ppos, new_pos=np1,
+            window=win, depth=depth)
+        return out, pk, pv, ppos, pmask
+
+    out_specs = (P(None, "model", None), kvspec, kvspec, mspec, mspec)
+    return _shard_map(local, mesh, tuple(specs), out_specs)(*arrs)
 
 
 def decode_attention_step(
@@ -243,7 +570,7 @@ def decode_attention_step(
         att_mask = mask & ((new_pos[:, :1] - pos) < window)
     out = ops.decode_attention(q[:, 0], k, v, kv_mask=att_mask)
     out = out.reshape(B, 1, a.q_dim)
-    out = linear(out, p["wo"])
+    out = sharded_wo_linear(out, p["wo"], model_shard_mesh(inp.mesh, a))
     new_cache = {"k": k, "v": v, "pos": pos, "mask": mask}
     return out, new_cache
 
@@ -314,6 +641,15 @@ def decode_attention_step_paged(
     # every slot whose gaps/tails read that row
     write_ok &= pb != 0
     pb = jnp.where(write_ok, pb, 0)
+    smesh = model_shard_mesh(inp.mesh, a)
+    if smesh is not None:
+        out, pk, pv, ppos, pmask = _sharded_paged_decode(
+            q[:, 0], k_new[:, 0], v_new[:, 0], pool, table, pb, off,
+            write_ok, new_pos[:, 0], inp.positions[:, 0],
+            window=window, depth=depth, mesh=smesh)
+        out = out.reshape(B, 1, a.q_dim)
+        out = sharded_wo_linear(out, p["wo"], smesh)
+        return out, {"k": pk, "v": pv, "pos": ppos, "mask": pmask}
     pk = pool["k"].at[pb, off].set(k_new[:, 0].astype(pool["k"].dtype))
     pv = pool["v"].at[pb, off].set(v_new[:, 0].astype(pool["v"].dtype))
     ppos = pool["pos"].at[pb, off].set(new_pos[:, 0])
@@ -465,12 +801,11 @@ def _frozen_cache_stats(q, k, v, mask, *, mesh=None):
         gacc = jax.lax.psum(acc * corr[..., None], "model")
         return gm, gl, gacc
 
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(bspec, None, None), P(bspec, "model", None, None),
-                  P(bspec, "model", None, None), P(bspec, "model", None)),
-        out_specs=(P(bspec, None), P(bspec, None), P(bspec, None, None)),
-        check_vma=False,
+    return _shard_map(
+        local, mesh,
+        (P(bspec, None, None), P(bspec, "model", None, None),
+         P(bspec, "model", None, None), P(bspec, "model", None)),
+        (P(bspec, None), P(bspec, None), P(bspec, None, None)),
     )(q, k, v, mask)
 
 

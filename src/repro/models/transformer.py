@@ -36,7 +36,6 @@ import numpy as np
 from repro.common.config import EvictionConfig, ModelConfig
 from repro.core import eviction as ev
 from repro.core import scoring
-from repro.kernels import ops
 from repro.core.lookahead import append_lookahead, lora_scale
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
@@ -618,12 +617,17 @@ def resume_chunk_state(snap: ChunkState, capacity: int) -> ChunkState:
 
 
 def _ffn_residual(h, lp, cfg: ModelConfig, *, lora_l=None, lora_mask=None,
-                  ls: float = 1.0):
+                  ls: float = 1.0, smesh=None):
     """The post-attention half of a block (MoE or MLP residual) — the one
     definition shared by monolithic prefill, the chunk step, the
     observation pass (which thread the lookahead LoRA), and decode.
     Returns (h, aux) where aux is the MoE load-balance loss (zero
-    otherwise)."""
+    otherwise).  With ``smesh`` (tensor-sharded serving) every FFN dot
+    must keep the single-device summation order — GSPMD's realization is
+    shape-dependent, so the dense MLP runs manual column-parallel TP
+    (``mlp.apply_sharded``) and MoE runs replicated under shard_map
+    (``attention.replicated_apply`` — exact but redundant; sharded-exact
+    MoE dispatch is out of scope)."""
     aux = jnp.zeros((), jnp.float32)
     if cfg.moe is not None:
         u = rms_norm(h, lp["ln2"], cfg.norm_eps)
@@ -632,16 +636,20 @@ def _ffn_residual(h, lp, cfg: ModelConfig, *, lora_l=None, lora_mask=None,
             moe_lora = lora_l["moe"].get("shared")
         apply = (moe_mod.apply_sparse if cfg.moe.dispatch == "sparse"
                  else moe_mod.apply)
-        mo, aux = apply(lp["moe"], cfg, u, lora=moe_lora,
-                        lora_mask=lora_mask, lora_scale=ls)
+        fn = lambda pp, uu, lo, lm: apply(pp, cfg, uu, lora=lo,
+                                          lora_mask=lm, lora_scale=ls)
+        if smesh is not None:
+            mo, aux = attn_mod.replicated_apply(
+                fn, smesh, lp["moe"], u, moe_lora, lora_mask)
+        else:
+            mo, aux = fn(lp["moe"], u, moe_lora, lora_mask)
         h = h + mo
     elif cfg.d_ff > 0:
         u = rms_norm(h, lp["ln2"], cfg.norm_eps)
-        h = h + mlp_mod.apply(
-            lp["mlp"], cfg, u,
-            lora=None if lora_l is None else lora_l.get("mlp"),
-            lora_mask=lora_mask, lora_scale=ls,
-        )
+        mlp_lora = None if lora_l is None else lora_l.get("mlp")
+        mo = mlp_mod.apply_sharded(lp["mlp"], cfg, u, smesh, lora=mlp_lora,
+                                   lora_mask=lora_mask, lora_scale=ls)
+        h = h + mo
     return h, aux
 
 
@@ -653,6 +661,7 @@ def prefill_chunk(
     n_total: jnp.ndarray,  # () int32 — true prompt length (shared across B)
     *,
     policy: str,
+    mesh=None,  # serving mesh: per-shard head dispatch in the chunk kernel
 ) -> tuple[ChunkState, jnp.ndarray]:
     """Process one fixed-size prompt chunk starting at ``state.pos``.
 
@@ -669,7 +678,8 @@ def prefill_chunk(
     B, C = h.shape[:2]
     s = state.pos
     positions = jnp.broadcast_to(s + jnp.arange(C), (B, C))
-    inp = AttnInputs(positions=positions)
+    inp = AttnInputs(positions=positions, mesh=mesh)
+    smesh = attn_mod.model_shard_mesh(mesh, a)
     flags = is_global_flags(cfg)
 
     xs: dict = {"p": params["layers"], "k": state.k, "v": state.v}
@@ -687,13 +697,14 @@ def prefill_chunk(
     def body(h, x):
         lp = x["p"]
         flag = x.get("flag", True)
+        h = attn_mod.pin_activations(h, mesh)
         u = rms_norm(h, lp["ln1"], cfg.norm_eps)
         out, q, k_buf, v_buf, masses = attn_mod.chunk_prefill_attention(
             lp["attn"], a, u, inp, x["k"], x["v"], q_offset=s,
             is_global=flag, score_masses=want_masses, n_total=n_total,
         )
         h = h + out
-        h, _ = _ffn_residual(h, lp, cfg)
+        h, _ = _ffn_residual(h, lp, cfg, smesh=smesh)
         ys: dict = {"k": k_buf, "v": v_buf}
         acc_l, qbuf_l = scoring.update_layer_scores(
             policy, x.get("acc"), x.get("qbuf"), q, masses_l=masses,
@@ -732,6 +743,7 @@ def _chunk_observation_pass(
     policy: str,
     lkv_params: Optional[dict],
     obs_tokens: Optional[jnp.ndarray],
+    mesh=None,
 ):
     """Final-chunk observation forward for lookaheadkv / gt_oracle: run the
     observation rows (learned lookahead rows / the GT response suffix)
@@ -755,7 +767,8 @@ def _chunk_observation_pass(
         n_obs = h.shape[1]
         lora_tree, ls, lmask = None, 1.0, None
     positions = jnp.broadcast_to(n_total + jnp.arange(n_obs), (B, n_obs))
-    inp = AttnInputs(positions=positions, lookahead_mask=lmask)
+    inp = AttnInputs(positions=positions, lookahead_mask=lmask, mesh=mesh)
+    smesh = attn_mod.model_shard_mesh(mesh, a)
     flags = is_global_flags(cfg)
 
     xs: dict = {"p": params["layers"], "k": state.k, "v": state.v}
@@ -770,6 +783,7 @@ def _chunk_observation_pass(
         lp = x["p"]
         lora_l = x.get("lora")
         flag = x.get("flag", True)
+        h = attn_mod.pin_activations(h, mesh)
         u = rms_norm(h, lp["ln1"], cfg.norm_eps)
         out, q, k_buf, v_buf, _ = attn_mod.chunk_prefill_attention(
             lp["attn"], a, u, inp, x["k"], x["v"], q_offset=n_total,
@@ -779,11 +793,12 @@ def _chunk_observation_pass(
         )
         h = h + out
         h, _ = _ffn_residual(h, lp, cfg, lora_l=lora_l, lora_mask=lmask,
-                             ls=ls)
+                             ls=ls, smesh=smesh)
         # the masked streaming primitive scores the observation rows over
         # the whole buffer (mean over the n_obs rows, traced row base)
-        masses = ops.lookahead_score(
+        masses = attn_mod.sharded_lookahead_score(
             q, k_buf, K, q_offset=n_total, window=layer_window(a, flag),
+            smesh=smesh,
         )
         return h, {"k": k_buf, "v": v_buf, "obs": masses}
 
@@ -803,6 +818,7 @@ def prefill_finalize(
     obs_tokens: Optional[jnp.ndarray] = None,  # (B, n_obs) gt_oracle only
     extra_slots: int = 0,
     seeds: Optional[jnp.ndarray] = None,  # (B,) request seeds (random policy)
+    mesh=None,  # serving mesh: per-shard observation / window scoring
 ) -> dict:
     """Close a streaming prefill: run the deferred observation pass (if the
     policy has one), turn the accumulated ``ScoreState`` into eviction
@@ -819,8 +835,9 @@ def prefill_finalize(
     if policy in scoring.FINAL_OBS:
         kbuf, vbuf, obs_masses = _chunk_observation_pass(
             params, cfg, state, n_total, policy=policy,
-            lkv_params=lkv_params, obs_tokens=obs_tokens,
+            lkv_params=lkv_params, obs_tokens=obs_tokens, mesh=mesh,
         )
+    smesh = attn_mod.model_shard_mesh(mesh, a)
     budgets, _ = _policy_budget_schedule(
         cfg, policy, evict.budget if policy != "full" else K,
         evict.pyramid_beta,
@@ -851,6 +868,7 @@ def prefill_finalize(
                 pool_kernel=lk.pool_kernel if lk else 7,
                 window_size=lk.window_size if lk else 32,
                 window=layer_window(a, flag),
+                smesh=smesh,
             )
         else:
             s_kv = ev.position_scores(
@@ -1136,12 +1154,14 @@ def decode_step(
         positions=positions, mrope_positions=mrope,
         cache_cursor=cursor, mesh=mesh,
     )
+    smesh = None if a is None else attn_mod.model_shard_mesh(mesh, a)
 
     def body(h, x):
         lp = x["p"]
         flag = x.get("flag", True)
         ys: dict = {}
         if cfg.uses_attention or cfg.uses_ssm:
+            h = attn_mod.pin_activations(h, mesh)
             u = rms_norm(h, lp["ln1"], cfg.norm_eps)
             delta = 0.0
             if cfg.uses_attention and "attn_cache" in x:
@@ -1177,7 +1197,7 @@ def decode_step(
             else:
                 h = h + attn_mod.cross_attention(lp["cross"], a, u,
                                                  x["ck"], x["cv"])
-        h, _ = _ffn_residual(h, lp, cfg)
+        h, _ = _ffn_residual(h, lp, cfg, smesh=smesh)
         return h, ys
 
     h, ys = jax.lax.scan(body, h, xs)

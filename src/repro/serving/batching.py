@@ -52,14 +52,22 @@ class ChunkCompileCache:
     recompiles are visible alongside key misses.
     """
 
-    def __init__(self, build: Callable[[str, str], Callable]):
+    def __init__(self, build: Callable[[str, str], Callable],
+                 mesh_sig=None):
         self._build = build
         self._fns: dict = {}
         self.hits = 0
         self.misses = 0
+        # Sharded serving: programs compiled against one device mesh are
+        # not reusable on another, so a non-trivial mesh signature (from
+        # ``common.sharding.mesh_signature``) joins the key.  Meshless
+        # engines keep the bare 4-tuple keys tests pin.
+        self._mesh_sig = mesh_sig
 
     def get(self, kind: str, chunk: int, batch: int, policy: str):
         key = (kind, chunk, batch, policy)
+        if self._mesh_sig is not None:
+            key = key + (self._mesh_sig,)
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1

@@ -77,6 +77,22 @@ def _request_seeds(requests) -> jnp.ndarray:
     return jnp.asarray([r.eviction_seed for r in requests], jnp.int32)
 
 
+def _snapshot(arr: np.ndarray) -> jnp.ndarray:
+    """Freeze a host mirror for async dispatch.
+
+    jax stages host→device transfers lazily, so an argument buffer the
+    engine mutates in place after the call (cursor / position advance,
+    retirement bookkeeping) can be read by the device *mid-flight* — the
+    PR 5 bimodal-tokens race.  Hand jax a private copy, and mark that
+    copy read-only so the next mirror added to the engine cannot silently
+    reintroduce the race by reusing a handed-off buffer as its mirror:
+    any in-place write to it raises instead of corrupting a dispatch.
+    """
+    c = np.array(arr)  # always a fresh contiguous buffer, never a view
+    c.flags.writeable = False
+    return jnp.asarray(c)
+
+
 class ServingEngine:
     """Deprecated lockstep batch engine: every request in a batch shares one
     prompt length, and prefill/decode run back-to-back for the whole batch.
@@ -205,11 +221,12 @@ class _SlotDecodeMixin:
         fn = self._decode_fns.get(steps)
         if fn is None:
             sampling = getattr(self, "sampling", None)
+            mesh = getattr(self, "mesh", None)
 
             def body(params, tok, cache, active, seeds):
                 return policies.decode_chunk(
                     params, self.cfg, tok, cache, steps, active=active,
-                    sampling=sampling, seeds=seeds)
+                    sampling=sampling, seeds=seeds, mesh=mesh)
 
             fn = jax.jit(body)
             self._decode_fns[steps] = fn
@@ -311,6 +328,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         reserve_appends: bool = True,  # guarantee admitted requests' growth
         capture_admission: bool = False,  # stash mask/pos on each Request
         sampling: Optional[policies.Sampling] = None,  # None = greedy
+        mesh=None,  # ("data","model") mesh: tensor-parallel serving
     ):
         assert tf.chunkable(cfg), \
             "chunked continuous batching serves attention-only decoder archs"
@@ -324,6 +342,32 @@ class ContinuousEngine(_SlotDecodeMixin):
         self.policy = policy
         self.evict = evict if evict is not None else EvictionConfig()
         self.lkv_params = lkv_params
+        # tensor-parallel serving: commit the params to their param_specs
+        # shardings (Megatron GQA rules — q/o on heads, k/v on kv heads
+        # over "model") so every jitted program below lowers sharded, and
+        # thread the mesh into the chunk / finalize / decode bodies, where
+        # attention.py shard_maps the kernels over each shard's local head
+        # slice.  Lookahead params are tiny and replicate.
+        self.mesh = mesh
+        self._mesh_sig = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.common.sharding import (lkv_specs, mesh_signature,
+                                               param_specs)
+
+            self._mesh_sig = mesh_signature(mesh)
+            self.params = jax.tree.map(
+                lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+                params, param_specs(cfg, mesh))
+            if lkv_params is not None:
+                self.lkv_params = jax.tree.map(
+                    lambda x, sp: jax.device_put(x, NamedSharding(mesh, sp)),
+                    lkv_params, lkv_specs(lkv_params))
+            if kv_pool is not None:
+                assert kv_pool.model_shards == int(mesh.shape["model"]), \
+                    "kv pool built for a different mesh: pass the same " \
+                    "mesh to KVBlockPool(..., mesh=...)"
         self.num_slots = num_slots
         self.chunk = chunk
         self.max_new_tokens = max_new_tokens
@@ -344,7 +388,8 @@ class ContinuousEngine(_SlotDecodeMixin):
         # O(log max_len) compiled shapes over a serving lifetime
         self._base_cap = self._rung(max(max_context, self.capacity))
         self._ctx_cap = self._base_cap  # high-water mark (observability)
-        self.chunk_cache = ChunkCompileCache(self._build)
+        self.chunk_cache = ChunkCompileCache(self._build,
+                                             mesh_sig=self._mesh_sig)
         self._decode_fns: dict = {}
         self._insert_fn = jax.jit(tf.insert_request_cache)
         self.stats: dict = {}
@@ -360,7 +405,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         # served tokens and kept sets are bit-equal to an uncached serve.
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
-            prefix_cache.bind(chunk=chunk, policy=policy, model=params)
+            prefix_cache.bind(chunk=chunk, policy=policy, model=self.params)
         # paged KV memory (serving/kv_pool.py): decode caches live in a
         # shared block pool instead of dense per-slot buffers — eviction
         # frees real device blocks, and admission is gated by free-block
@@ -380,7 +425,7 @@ class ContinuousEngine(_SlotDecodeMixin):
             # deterministic (active slots move `steps` per decode chunk),
             # so mirrors never drift from the device state they shadow
             self._table_h = np.zeros((num_slots, self._nb_max), np.int32)
-            self._table_dev = jnp.asarray(self._table_h.copy())  # np copy: the mirror mutates while transfers stage lazily
+            self._table_dev = _snapshot(self._table_h)
             self._cursor_h = np.zeros(num_slots, np.int32)
             self._npos_h = np.zeros(num_slots, np.int32)
             self._slot_blocks: dict[int, list[int]] = {
@@ -409,13 +454,15 @@ class ContinuousEngine(_SlotDecodeMixin):
         if kind == "chunk":
             def fn(params, state, tokens, n_total):
                 return tf.prefill_chunk(params, self.cfg, state, tokens,
-                                        n_total, policy=policy)
+                                        n_total, policy=policy,
+                                        mesh=self.mesh)
         else:  # finalize
             def fn(params, lkv, state, n_total, seeds):
                 cache = tf.prefill_finalize(
                     params, self.cfg, state, n_total, policy=policy,
                     evict=self.evict, lkv_params=lkv,
                     extra_slots=self.decode_margin, seeds=seeds,
+                    mesh=self.mesh,
                 )
                 if self.decode_evict:
                     cache = tf.add_decode_eviction_scores(cache)
@@ -532,7 +579,12 @@ class ContinuousEngine(_SlotDecodeMixin):
                       # which paged_decode_attention tier serves this run
                       # (kernel / gather / fallback); "dense" when unpooled
                       "decode_path": (ops.paged_decode_path(self._paged_depth)
-                                      if self.pool is not None else "dense")}
+                                      if self.pool is not None else "dense"),
+                      # device mesh this engine serves on (None: single
+                      # device); bench rows carry it next to decode_path
+                      "mesh": ({n: int(self.mesh.shape[n])
+                                for n in self.mesh.axis_names}
+                               if self.mesh is not None else None)}
         if self.prefix_cache is not None:
             self.stats.update(prefix_hits=0, prefix_misses=0,
                               prefix_tokens_skipped=0)
@@ -601,19 +653,18 @@ class ContinuousEngine(_SlotDecodeMixin):
                         dispatched = active.copy()
                         fn = self._decode_fn_paged(steps)
                         t_dec = time.perf_counter()
-                        # snapshot the host mirrors with *numpy* copies
-                        # before handing them to jax: dispatch is async
-                        # and the host->device staging of an argument can
-                        # happen after this call returns, so a buffer we
-                        # mutate in place below (cursor/npos advance,
-                        # retirement bookkeeping) would race the device
-                        # read — jnp.array/asarray both defer the read
+                        # _snapshot the host mirrors before handing them
+                        # to jax: dispatch is async and the host->device
+                        # staging of an argument can happen after this
+                        # call returns, so a buffer we mutate in place
+                        # below (cursor/npos advance, retirement
+                        # bookkeeping) would race the device read
                         tok, ptree, toks = fn(
                             self.params, tok, self._table_dev,
-                            jnp.asarray(self._cursor_h.copy()),
-                            jnp.asarray(self._npos_h[:, None].copy()),
-                            self.pool.tree(), jnp.asarray(active.copy()),
-                            jnp.asarray(self._seeds_h.copy()))
+                            _snapshot(self._cursor_h),
+                            _snapshot(self._npos_h[:, None]),
+                            self.pool.tree(), _snapshot(active),
+                            _snapshot(self._seeds_h))
                         self.pool.set_tree(ptree)
                         # mirror the device advance rule exactly: slots
                         # active at dispatch move `steps`, cursors clamp
@@ -715,8 +766,8 @@ class ContinuousEngine(_SlotDecodeMixin):
             pf.tip = None
         if self.capture_admission:
             r.admission_cache = {
-                "mask": np.asarray(cache["attn"]["mask"]),
-                "pos": np.asarray(cache["attn"]["pos"]),
+                key: np.asarray(val) for key, val in cache["attn"].items()
+                if key in ("mask", "pos", "score")
             }
         pf.logits.block_until_ready()
         if self.pool is not None:
@@ -843,7 +894,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         self._slot_blocks[slot] = [int(b) for b in ids]
         self._table_h[slot] = 0
         self._table_h[slot, :len(ids)] = ids
-        self._table_dev = jnp.asarray(self._table_h.copy())  # np copy: the mirror mutates while transfers stage lazily
+        self._table_dev = _snapshot(self._table_h)
         self._cursor_h[slot] = self.capacity  # appends start where dense do
         self._npos_h[slot] = int(cache["next_pos"][0, 0])
         return slot
@@ -853,6 +904,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         if fn is None:
             depth = self._paged_depth
             sampling = self.sampling
+            mesh = self.mesh
 
             def body(params, tok, table, cursor, next_pos, pool, active,
                      seeds):
@@ -860,7 +912,8 @@ class ContinuousEngine(_SlotDecodeMixin):
                          "cursor": cursor, "next_pos": next_pos}
                 last, cache, toks = policies.decode_chunk(
                     params, self.cfg, tok, cache, steps, active=active,
-                    paged_depth=depth, sampling=sampling, seeds=seeds)
+                    paged_depth=depth, sampling=sampling, seeds=seeds,
+                    mesh=mesh)
                 return last, cache["pool"], toks
 
             fn = jax.jit(body)
@@ -974,7 +1027,7 @@ class ContinuousEngine(_SlotDecodeMixin):
                 self._slot_blocks[slot].append(int(ids[0]))
                 changed = True
         if changed:
-            self._table_dev = jnp.asarray(self._table_h.copy())  # np copy: the mirror mutates while transfers stage lazily
+            self._table_dev = _snapshot(self._table_h)
 
     def _reclaim_for_head(self, sched) -> None:
         """Nothing is running yet the queue head stays gated: every

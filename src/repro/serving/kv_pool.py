@@ -67,6 +67,7 @@ class KVBlockPool:
         block_size: int = 16,
         num_blocks: Optional[int] = None,
         pool_mb: Optional[float] = None,
+        mesh=None,
     ):
         assert cfg.attn is not None, "paged KV serves attention archs"
         assert block_size > 0
@@ -87,6 +88,29 @@ class KVBlockPool:
         self.v = jnp.zeros((L, N, block_size, KV, hd), dtype)
         self.pos = jnp.zeros((L, N, block_size, KV), jnp.int32)
         self.mask = jnp.zeros((L, N, block_size, KV), bool)
+        # tensor-parallel serving: the device arrays shard their kv-head
+        # dim over "model" (each shard holds whole blocks of its local
+        # head slice), while the host allocator below is head-oblivious —
+        # every block id means the same rows on every shard, so the free
+        # list and block tables need no mesh awareness at all.
+        self.mesh = None
+        self.model_shards = 1
+        if mesh is not None:
+            from repro.common.sharding import pool_specs
+
+            specs = pool_specs(cfg, mesh)
+            assert specs is not None, (
+                f"kv heads ({KV}) must divide the model axis "
+                f"({dict(getattr(mesh, 'shape', {}))}) to shard the pool")
+            self.mesh = mesh
+            self.model_shards = int(mesh.shape["model"])
+            put = {
+                n: jax.device_put(
+                    getattr(self, n),
+                    jax.sharding.NamedSharding(mesh, specs[n]))
+                for n in ("k", "v", "pos", "mask")
+            }
+            self.set_tree(put)
         # host allocator state: ids 1..N-1 are allocatable
         self._free: list[int] = list(range(N - 1, 0, -1))
         self._refs = np.zeros(N, np.int32)
@@ -288,7 +312,15 @@ class KVBlockPool:
 
     def stats(self) -> dict:
         used = self.used_blocks()
+        shards = self.model_shards
         return {
+            # mesh shape + per-shard utilization: block counts are global
+            # (the allocator is shard-oblivious), bytes divide evenly over
+            # the kv-head shards
+            "mesh_model": shards,
+            "bytes_total_per_shard":
+                self.usable_blocks * self.block_bytes // shards,
+            "bytes_used_per_shard": used * self.block_bytes // shards,
             "block_size": self.block_size,
             "block_bytes": self.block_bytes,
             "blocks_total": self.usable_blocks,

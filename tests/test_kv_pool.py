@@ -403,3 +403,33 @@ def test_pool_stats_and_engine_reporting(model):
     cb = eng.cache_bytes(128)
     assert "pool" in cb and cb["evicted"] > 0
     assert eng.kv_device_bytes() == s["bytes_total"]
+
+
+# ---------------------------------------------------------------------------
+# 6. async-dispatch mirror snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_mirror_snapshots_are_frozen_copies(model):
+    """The paged dispatch hands jax *snapshots* of the host mirrors: jax
+    stages host->device transfers lazily, so mutating a mirror in place
+    after the call (cursor advance, retirement bookkeeping) must never
+    change what an in-flight dispatch reads.  ``_snapshot`` hands jax a
+    private read-only copy; the original mirror stays writable."""
+    from repro.serving import engine as engine_mod
+
+    a = np.arange(6, dtype=np.int32)
+    snap = engine_mod._snapshot(a)
+    a[:] = -1  # post-dispatch mirror mutation, as the engine does in place
+    assert np.asarray(snap).tolist() == [0, 1, 2, 3, 4, 5]
+    assert a.flags.writeable  # only the handed-off copy is frozen
+
+    cfg, params, lkv = model
+    reqs = make_trace_requests(cfg, chunk=128, seed=9, n_requests=2,
+                               max_new=3)
+    pool = _pool(cfg)
+    _, eng = run_trace(cfg, params, lkv, policy="h2o", requests=reqs,
+                       chunk=128, kv_pool=pool, decode_chunk=2)
+    before = np.asarray(eng._table_dev).copy()
+    eng._table_h[:] = 7  # the device snapshot must not alias the mirror
+    assert np.array_equal(np.asarray(eng._table_dev), before)

@@ -1,0 +1,60 @@
+"""``launch.mesh`` + ``common.sharding`` mesh helpers.
+
+Shape-level properties that hold at any forced host device count: the CI
+multi-device job runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` where every split
+of 8 is exercised; the single-device tier-1 run still covers the
+degenerate (1, 1) mesh, the non-divisible assert, and the multi-pod
+axis-name paths (buildable on one device as a (1, 1, 1) mesh).
+"""
+
+import jax
+import pytest
+
+from repro.common.sharding import mesh_signature, pool_specs
+from repro.configs import get_smoke_config
+from repro.launch.mesh import axis_size, data_axes, make_host_mesh
+
+
+def test_make_host_mesh_divisible_splits():
+    n = len(jax.devices())
+    for model in [m for m in (1, 2, 4, 8) if n % m == 0]:
+        mesh = make_host_mesh(model=model)
+        assert mesh.axis_names == ("data", "model")
+        assert axis_size(mesh, "model") == model
+        assert axis_size(mesh, "data") == n // model
+        assert data_axes(mesh) == ("data",)
+
+
+def test_make_host_mesh_non_divisible_asserts():
+    n = len(jax.devices())
+    with pytest.raises(AssertionError):
+        make_host_mesh(model=n + 1)  # n % (n + 1) == n != 0 for n >= 1
+
+
+def test_multi_pod_axis_names():
+    # the production (2, 16, 16) mesh needs 512 chips, but its axis-name
+    # contract is checkable on any host via a degenerate 3-axis mesh
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    assert data_axes(mesh) == ("pod", "data")
+    assert axis_size(mesh, "pod") == 1
+
+
+def test_mesh_signature_trivial_and_not():
+    assert mesh_signature(None) is None
+    assert mesh_signature(jax.make_mesh((1, 1), ("data", "model"))) is None
+    n = len(jax.devices())
+    if n > 1:
+        sig = mesh_signature(make_host_mesh(model=n))
+        assert sig == (("data", 1), ("model", n))
+
+
+def test_pool_specs_gate_on_kv_divisibility():
+    cfg = get_smoke_config("smollm-135m")  # 1 kv head
+    mesh = make_host_mesh(model=1)
+    assert pool_specs(cfg, None) is None
+    specs = pool_specs(cfg, mesh)  # kv % 1 == 0: shardable (trivially)
+    assert specs is not None and set(specs) == {"k", "v", "pos", "mask"}
+    n = len(jax.devices())
+    if n % 2 == 0 and n > 1:
+        assert pool_specs(cfg, make_host_mesh(model=2)) is None

@@ -1,0 +1,147 @@
+"""Mesh-sharded serving: tensor-parallel paged decode + chunked prefill
+over a ("data", "model") device mesh, proven bit-exact vs single-device.
+
+The headline property mirrors ``tests/test_kv_pool.py``: on a forced
+multi-device host mesh (``XLA_FLAGS=--xla_force_host_platform_device_count
+=8``), serving a seeded randomized trace through ``ContinuousEngine`` with
+a tensor-sharded model and a kv-head-sharded ``KVBlockPool`` must emit
+*bit-identical tokens and kept (layer, head, position) sets* per request
+as single-device serving — for servable single-pass policies, at model
+axis sizes 2 and 4, on both the jnp and forced-Pallas dispatch paths.
+
+Why exactness is even on the table: every dot on the sharded path runs
+under manual shard_map with its contraction in single-device order.
+Heads are data-parallel inside attention (contiguous kv-head shards own
+exactly their q heads' GQA groups, each per-head reduction sweeps the
+full sequence unsplit), q/k/v and wo and the MLP run column-parallel —
+full contraction per local output column, activations all-gathered
+*inside* shard_map where a reduction spans a sharded dim — so no psum
+ever touches a summation.  GSPMD alone cannot promise this: its dot
+realization is shape-dependent and free to re-associate the bf16 sums
+(observed at chunk=32 with 31-token prompts before the manual TP).
+
+Runs only under a forced >= 8-device host (the CI multi-device job);
+skips cleanly in the single-device tier-1 run.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.lookahead import init_lookahead_params
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tf
+from repro.serving import KVBlockPool
+from trace_utils import kept_sets, make_trace_requests, run_trace
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+# two servable single-pass policies spanning both scoring families:
+# attention-mass accumulation (h2o) and the trained observation pass
+POLICIES = ("h2o", "lookaheadkv")
+CHUNK = 128
+
+
+@pytest.fixture(scope="module")
+def model():
+    # the smoke arch's (3 q, 1 kv) heads divide nothing: rebuild it with a
+    # GQA geometry divisible by model in {2, 4} (8 q over 4 kv groups)
+    base = get_smoke_config("smollm-135m")
+    cfg = dataclasses.replace(
+        base, name="smollm-smoke-tp", d_model=128,
+        attn=dataclasses.replace(base.attn, num_heads=8, num_kv_heads=4,
+                                 head_dim=16))
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
+    return cfg, params, lkv
+
+
+def _requests(cfg, seed=3):
+    return make_trace_requests(cfg, chunk=CHUNK, seed=seed, n_requests=3,
+                               max_new=4)
+
+
+def _pool(cfg, mesh=None):
+    return KVBlockPool(cfg, block_size=16, num_blocks=128, mesh=mesh)
+
+
+_BASELINE: dict = {}
+
+
+def _baseline(model, policy):
+    """Single-device reference run, computed once per policy per dispatch
+    path (the module is invoked separately under REPRO_FORCE_PALLAS)."""
+    if policy not in _BASELINE:
+        cfg, params, lkv = model
+        done, _ = run_trace(cfg, params, lkv, policy=policy,
+                            requests=_requests(cfg), chunk=CHUNK,
+                            kv_pool=_pool(cfg), decode_chunk=2)
+        _BASELINE[policy] = done
+    return _BASELINE[policy]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("model_shards", [2, 4])
+def test_sharded_serving_bit_exact(model, policy, model_shards):
+    cfg, params, lkv = model
+    base = _baseline(model, policy)
+    mesh = make_host_mesh(model=model_shards)
+    got, eng = run_trace(cfg, params, lkv, policy=policy,
+                         requests=_requests(cfg), chunk=CHUNK,
+                         kv_pool=_pool(cfg, mesh=mesh), mesh=mesh,
+                         decode_chunk=2)
+    for uid, want in base.items():
+        r = got[uid]
+        assert r.out_tokens == want.out_tokens, \
+            f"policy={policy} model={model_shards} uid={uid}: tokens diverged"
+        assert kept_sets(r.admission_cache) == kept_sets(
+            want.admission_cache), \
+            f"policy={policy} model={model_shards} uid={uid}: kept sets " \
+            "diverged"
+    # satellite observability: the mesh shape reaches engine + pool stats
+    assert eng.stats["mesh"] == {"data": 8 // model_shards,
+                                 "model": model_shards}
+    s = eng.stats["kv_pool"]
+    assert s["mesh_model"] == model_shards
+    assert s["bytes_total_per_shard"] == s["bytes_total"] // model_shards
+
+
+def test_mesh_keys_fork_the_compile_cache(model):
+    """Programs compiled against one mesh are not reusable on another: the
+    chunk compile cache keys a non-trivial mesh signature, while meshless
+    serving keeps the bare 4-tuple keys older tests pin."""
+    cfg, params, lkv = model
+    _, plain = run_trace(cfg, params, lkv, policy="h2o",
+                         requests=_requests(cfg), chunk=CHUNK,
+                         kv_pool=_pool(cfg), decode_chunk=2)
+    for key in plain.chunk_cache.keys:
+        assert len(key) == 4, key
+    mesh = make_host_mesh(model=2)
+    _, sharded = run_trace(cfg, params, lkv, policy="h2o",
+                           requests=_requests(cfg), chunk=CHUNK,
+                           kv_pool=_pool(cfg, mesh=mesh), mesh=mesh,
+                           decode_chunk=2)
+    for key in sharded.chunk_cache.keys:
+        assert key[-1] == (("data", 4), ("model", 2)), key
+
+
+def test_pool_mesh_must_match_engine_mesh(model):
+    cfg, params, lkv = model
+    mesh = make_host_mesh(model=2)
+    with pytest.raises(AssertionError, match="different mesh"):
+        run_trace(cfg, params, lkv, policy="h2o", requests=_requests(cfg),
+                  chunk=CHUNK, kv_pool=_pool(cfg), mesh=mesh,
+                  decode_chunk=2)
+
+
+def test_pool_rejects_indivisible_mesh():
+    # 1 kv head cannot shard over model=2: the pool fails loudly instead
+    # of silently replicating under a sharded engine
+    cfg = get_smoke_config("smollm-135m")
+    with pytest.raises(AssertionError, match="divide the model axis"):
+        KVBlockPool(cfg, block_size=16, num_blocks=32,
+                    mesh=make_host_mesh(model=2))
