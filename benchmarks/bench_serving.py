@@ -27,6 +27,13 @@ reserves (``kv_bytes_peak`` — BENCH_*.json tracks the memory trajectory
 across PRs; ``benchmarks/bench_paged.py`` is the bench that *varies* it).  The chunked engine must compile
 strictly fewer programs and cut p95 TPOT / decode stall under the long
 tail — the bench prints an explicit PASS/FAIL verdict line.
+
+``bench_decode_evict`` (``--decode-evict``; always part of the CI
+``run`` entry) replays a **long-generation** trace through the paged
+pool with decode-time eviction off vs on at equal KV pool bytes: the
+``serving/decode_evict_verdict`` row passes iff sweeps reclaim whole
+blocks mid-generation and lift peak concurrency, with every generation
+still completing at full length.
 """
 
 from __future__ import annotations
@@ -44,7 +51,9 @@ from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import BucketedEngine, ContinuousEngine, ServingEngine
+from repro.serving import (BucketedEngine, ChunkingConfig, ContinuousEngine,
+                           DecodeEvictionConfig, KVBlockPool, ServingConfig,
+                           ServingEngine)
 
 # Heterogeneous short lengths (9 distinct values over 3 compile buckets).
 PROMPT_LENS = (17, 24, 31, 41, 48, 60, 75, 90, 120)
@@ -172,8 +181,13 @@ def bench(n_requests=24, rate_hz=20.0, policy="lookaheadkv", slots=4,
         bucket_eng = BucketedEngine(params, cfg, num_slots=slots,
                                     buckets=BUCKETS, **kw)
         lock_eng = ServingEngine(params, cfg, **kw) if lockstep else None
-    chunk_eng = ContinuousEngine(params, cfg, num_slots=slots, chunk=CHUNK,
-                                 max_context=max(PROMPT_LENS) + CHUNK, **kw)
+    chunk_eng = ContinuousEngine(
+        params, cfg,
+        ServingConfig(policy=policy, evict=EvictionConfig(budget=BUDGET),
+                      chunking=ChunkingConfig(
+                          chunk=CHUNK, max_context=max(PROMPT_LENS) + CHUNK),
+                      num_slots=slots, max_new_tokens=MAX_NEW, eos_id=-1),
+        lkv_params=lkv)
     bucket_eng.warmup(PROMPT_LENS, batch_sizes=(1, 2, slots))
     chunk_eng.warmup(PROMPT_LENS)
     if warmup:  # one untimed replay per engine compiles every program
@@ -191,6 +205,80 @@ def bench(n_requests=24, rate_hz=20.0, policy="lookaheadkv", slots=4,
             out["lockstep"] = run_lockstep(lock_eng, _clone(trace))
     out["chunked"] = run_chunked(chunk_eng, _clone(trace))
     return out
+
+
+def bench_decode_evict(n_requests=8, policy="lookaheadkv", seed=0, *,
+                       max_new=48, interval=16, block_size=16,
+                       pool_blocks=10, slots=4, warmup=True):
+    """Long-generation trace on the paged pool, decode-time eviction off
+    vs on, at **equal KV pool bytes** (identical pool geometry).
+
+    Off, every admitted request must reserve ``budget + max_new + 1``
+    rows of pool for its whole lifetime; on, a slot's footprint is
+    bounded at ``budget + interval`` rows because periodic sweeps
+    re-evict the grown cache and free the tail blocks mid-generation —
+    so the same pool admits more concurrent requests.  Reported per
+    config: throughput, peak concurrency, pool high water, and the
+    blocks reclaimed by sweeps."""
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
+    trace = make_poisson_trace(n_requests, cfg.vocab_size, PROMPT_LENS[:5],
+                               seed=seed, max_new=max_new, rate_hz=100.0)
+
+    def engine(enabled):
+        pool = KVBlockPool(cfg, block_size=block_size,
+                           num_blocks=pool_blocks)
+        sc = ServingConfig(
+            policy=policy, evict=EvictionConfig(budget=BUDGET),
+            decode_evict=DecodeEvictionConfig(enabled=enabled,
+                                              interval=interval),
+            chunking=ChunkingConfig(chunk=CHUNK,
+                                    max_context=max(PROMPT_LENS) + CHUNK),
+            num_slots=slots, max_new_tokens=max_new, eos_id=-1,
+            kv_pool=pool)
+        return ContinuousEngine(params, cfg, sc, lkv_params=lkv), pool
+
+    out = {}
+    for name, enabled in (("paged", False), ("paged_evict", True)):
+        eng, pool = engine(enabled)
+        if warmup:
+            eng.run(_clone(trace))
+        t0 = time.perf_counter()
+        done = eng.run(_clone(trace))
+        wall = time.perf_counter() - t0
+        s = eng.stats["kv_pool"]
+        out[name] = {
+            "wall_s": wall,
+            "tok_per_s": sum(len(r.out_tokens) for r in done) / wall,
+            "full_length": all(len(r.out_tokens) == max_new for r in done),
+            "max_concurrency": eng.stats["max_concurrency"],
+            "pool_bytes": s["bytes_total"],
+            "high_water_blocks": s["high_water_blocks"],
+            "sweeps": eng.stats.get("decode_evict_sweeps", 0),
+            "blocks_reclaimed": s["blocks_reclaimed_decode"],
+            "preemptions": eng.stats["preemptions"],
+        }
+    return out
+
+
+def _decode_evict_verdict(res) -> tuple[bool, str]:
+    off, on = res["paged"], res["paged_evict"]
+    assert off["pool_bytes"] == on["pool_bytes"], \
+        "the comparison is only meaningful at equal KV pool bytes"
+    more = on["max_concurrency"] > off["max_concurrency"]
+    reclaims = on["blocks_reclaimed"] > 0
+    complete = on["full_length"] and off["full_length"]
+    ok = more and reclaims and complete
+    return ok, (f"{'PASS' if ok else 'FAIL'}: at "
+                f"{off['pool_bytes'] / 1e6:.2f} MB of pool, decode "
+                f"eviction lifts peak concurrency "
+                f"{off['max_concurrency']} -> {on['max_concurrency']} "
+                f"({'more' if more else 'NOT more'}); "
+                f"{on['sweeps']} sweeps reclaimed "
+                f"{on['blocks_reclaimed']} blocks mid-generation "
+                f"({'some' if reclaims else 'NONE'}); generations "
+                f"{'complete' if complete else 'TRUNCATED'}")
 
 
 def _verdict(res) -> tuple[bool, str]:
@@ -233,6 +321,19 @@ def run(report):
     speed = (res["chunked"]["tok_per_s"]
              / max(res["bucketed"]["tok_per_s"], 1e-9))
     report("serving/chunked_speedup", None, f"{speed:.2f}x")
+    # decode-time eviction on the paged pool: concurrency at equal KV bytes
+    de = bench_decode_evict(n_requests=6, warmup=True)
+    for name in ("paged", "paged_evict"):
+        m = de[name]
+        report(f"serving/{name}_tok_per_s", None, f"{m['tok_per_s']:.1f}")
+        report(f"serving/{name}_max_concurrency", None,
+               str(m["max_concurrency"]))
+    report("serving/decode_evict_sweeps", None,
+           str(de["paged_evict"]["sweeps"]))
+    report("serving/decode_evict_blocks_reclaimed", None,
+           str(de["paged_evict"]["blocks_reclaimed"]))
+    ok_de, _ = _decode_evict_verdict(de)
+    report("serving/decode_evict_verdict", None, "pass" if ok_de else "fail")
 
 
 def main():
@@ -251,6 +352,9 @@ def main():
     ap.add_argument("--n-long", type=int, default=2)
     ap.add_argument("--lockstep", action="store_true",
                     help="also replay through the lockstep baseline")
+    ap.add_argument("--decode-evict", action="store_true",
+                    help="also run the paged-pool decode-eviction "
+                         "comparison (concurrency at equal KV bytes)")
     args = ap.parse_args()
     res = bench(args.requests, args.rate, args.policy, args.slots,
                 args.seed, warmup=not args.no_warmup,
@@ -276,6 +380,16 @@ def main():
           f"engine: {res['chunked']['engine_stats']})")
     if args.long_tail:
         print(_verdict(res)[1])
+    if args.decode_evict:
+        de = bench_decode_evict(args.requests, args.policy, args.seed,
+                                warmup=not args.no_warmup)
+        for name, m in de.items():
+            print(f"{name:12s} {m['tok_per_s']:8.1f} tok/s  concurrency "
+                  f"{m['max_concurrency']}  high water "
+                  f"{m['high_water_blocks']} blocks  {m['sweeps']} sweeps  "
+                  f"{m['blocks_reclaimed']} reclaimed  "
+                  f"{m['preemptions']} preemptions")
+        print(_decode_evict_verdict(de)[1])
 
 
 if __name__ == "__main__":

@@ -11,6 +11,10 @@ Gated verdicts:
 * ``serving/longtail_verdict`` — on the compact long-tail trace the
   chunked engine compiles strictly fewer programs than the bucketed
   baseline *and* cuts p95 TPOT;
+* ``serving/decode_evict_verdict`` — on a long-generation paged-pool
+  trace at equal KV bytes, decode-time eviction sweeps reclaim whole
+  blocks mid-generation and lift peak concurrency, with every
+  generation still completing at full length;
 * ``prefix/reuse_verdict``     — on the Zipf shared-prefix trace the
   radix-trie prompt cache admits a fully cached prompt faster than one
   uncached chunk prefills, with >= 2x aggregate TTFT improvement;

@@ -197,7 +197,13 @@ def decode_chunk(
     token at admission and decodes the rest in chunks between admissions.
     With ``sampling`` set, every step samples through the fused epilogue
     (see ``decode_one``) — one device round-trip per chunk, not per-step
-    logits transfers."""
+    logits transfers.
+
+    Decode-time eviction needs no parameters here: when the serving
+    engine arms it, its cumulative-score buffer rides the cache pytree —
+    a ``"score"`` leaf inside the dense ``cache["attn"]`` or the paged
+    ``cache["pool"]`` — and the scan simply carries it like every other
+    cache leaf while the attention steps accumulate into it."""
 
     def step(carry, _):
         tok, cache = carry

@@ -92,6 +92,27 @@ def gqa_reduce(scores: jnp.ndarray, num_kv_heads: int) -> jnp.ndarray:
     return scores.reshape(B, num_kv_heads, group, S).mean(axis=2)
 
 
+def decode_mass_update(
+    masses: jnp.ndarray,  # (B, H, D) decode token's normalized softmax masses
+    num_kv_heads: int,
+    active: Optional[jnp.ndarray] = None,  # (B,) live-slot mask
+) -> jnp.ndarray:
+    """One decode step's increment to the cumulative (H2O) decode-eviction
+    scores: (B, D, KV) f32.
+
+    The paged decode kernel's fused mass output is per *query* head; the
+    dense decode-eviction reference (``decode_attention_step_evicting``)
+    accumulates ``softmax(...).mean(axis=group)`` per kv head — so the
+    increment is the GQA mean transposed into the cache's (row, kv-head)
+    layout.  Masked rows arrive as exact zeros from every kernel tier, and
+    inactive slots (a zombie decode between requests) are zeroed here so
+    their scores stay untouched, mirroring the engine's cursor gating."""
+    add = jnp.moveaxis(gqa_reduce(masses, num_kv_heads), 1, 2)  # (B, D, KV)
+    if active is not None:
+        add = jnp.where(active[:, None, None], add, 0.0)
+    return add
+
+
 def maxpool1d(scores: jnp.ndarray, kernel: int) -> jnp.ndarray:
     """Max-pool along the last axis with 'same' padding (paper kernel=7).
 

@@ -327,7 +327,8 @@ def paged_decode_attention(
     new_pos: jnp.ndarray | None = None,  # (B,) query-token positions
     window=None,  # None | python int | traced int32 scalar
     depth: int | None = None,  # static logical cache depth (jnp gather path)
-) -> jnp.ndarray:
+    score_masses: bool = False,  # also emit normalized per-row softmax masses
+):
     """Decode attention over a paged KV cache (``serving/kv_pool.py``) —
     the serving hot path of ``attention.decode_attention_step_paged``.
 
@@ -352,10 +353,28 @@ def paged_decode_attention(
     cursor, stale rows of a reallocated block — must be masked False in
     ``mask_pool``; the mask is the single source of validity.  With
     ``window``, rows additionally need ``new_pos - pos < window``.
+
+    With ``score_masses=True`` the return value is ``(out, masses)`` where
+    ``masses[b, h, j]`` is the query's normalized softmax probability on
+    logical row ``j`` — the decode-time analogue of ``chunk_attention``'s
+    fused column masses, streamed into cumulative H2O scores by the
+    serving engine's decode-eviction sweep.  ``out`` stays bitwise the
+    ``score_masses=False`` result on every tier (the Pallas two-phase
+    kernel reruns the identical flash recurrence; the jnp tiers reuse the
+    unmodified attention), masked rows carry exact-zero mass, and
+    ``masses`` has ``depth`` columns when ``depth`` is given (else
+    ``nb * block_size``).
     """
     if use_pallas():
         from repro.kernels import paged_attention as pk
 
+        if score_masses:
+            out, masses = pk.paged_decode_masses_pallas(
+                q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
+                new_pos=new_pos, window=window,
+                interpret=_pallas_interpret(),
+            )
+            return out, (masses if depth is None else masses[..., :depth])
         return pk.paged_decode_attention_pallas(
             q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
             new_pos=new_pos, window=window, interpret=_pallas_interpret(),
@@ -366,16 +385,26 @@ def paged_decode_attention(
     if span <= _DIRECT_SEQ:
         from repro.kernels import ref
 
-        return ref.paged_decode_attention(
+        out = ref.paged_decode_attention(
             q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
             new_pos=new_pos, window=window, depth=depth)
+        if score_masses:
+            masses = ref.paged_decode_masses(
+                q, k_pool, mask_pool, table, pos_pool=pos_pool,
+                new_pos=new_pos, window=window, depth=depth)
+            return out, masses
+        return out
     # beyond the direct threshold the dense gather is the O(depth) HBM
     # copy the paged layout exists to avoid; rows past ``depth`` are
     # masked False by construction (appends clamp at depth), so the
     # streaming scan needs no slice
-    return _paged_decode_streaming(
+    res = _paged_decode_streaming(
         q, k_pool, v_pool, mask_pool, table, pos_pool=pos_pool,
-        new_pos=new_pos, window=window)
+        new_pos=new_pos, window=window, score_masses=score_masses)
+    if score_masses:
+        out, masses = res
+        return out, (masses if depth is None else masses[..., :depth])
+    return res
 
 
 def paged_decode_path(span: int) -> str:
@@ -389,10 +418,15 @@ def paged_decode_path(span: int) -> str:
 
 
 def _paged_decode_streaming(q, k_pool, v_pool, mask_pool, table, *,
-                            pos_pool=None, new_pos=None, window=None):
+                            pos_pool=None, new_pos=None, window=None,
+                            score_masses=False):
     """Gather-free jnp fallback: scan over block-table columns with the
     kernel's online-softmax recurrence — one (B, block_size) K/V tile in
-    flight per step, never a dense (B, depth, ...) copy."""
+    flight per step, never a dense (B, depth, ...) copy.  With
+    ``score_masses`` a second scan revisits each tile with the final
+    (m, l) statistics and emits its normalized masses — the streaming
+    analogue of the Pallas two-phase kernel, with the same bounded
+    temporaries."""
     B, H, hd = q.shape
     bs, KV = k_pool.shape[1], k_pool.shape[2]
     group = H // KV
@@ -400,16 +434,19 @@ def _paged_decode_streaming(q, k_pool, v_pool, mask_pool, table, *,
     qf = q.astype(jnp.float32)
     cols = jnp.moveaxis(table.astype(jnp.int32), 1, 0)  # (nb, B)
 
-    def body(carry, tb):
-        m, l, acc = carry
+    def tile_logits(tb):
         kb = _expand_gqa(k_pool[tb], group).astype(jnp.float32)
-        vb = _expand_gqa(v_pool[tb], group).astype(jnp.float32)
         mb = mask_pool[tb]  # (B, bs, KV)
         if window is not None:
             mb = mb & ((new_pos[:, None, None] - pos_pool[tb]) < window)
         s = jnp.einsum("bhd,bkhd->bhk", qf, kb) * scale
         mh = jnp.repeat(jnp.moveaxis(mb, 2, 1), group, axis=1)  # (B, H, bs)
-        s = jnp.where(mh, s, NEG_INF)
+        return jnp.where(mh, s, NEG_INF), mh
+
+    def body(carry, tb):
+        m, l, acc = carry
+        vb = _expand_gqa(v_pool[tb], group).astype(jnp.float32)
+        s, mh = tile_logits(tb)
         m_new = jnp.maximum(m, s.max(axis=-1))
         # the explicit where keeps fully-dead rows at l == 0 (m stays
         # NEG_INF, so exp(s - m) would be exp(0) = 1, not 0)
@@ -425,7 +462,20 @@ def _paged_decode_streaming(q, k_pool, v_pool, mask_pool, table, *,
         jnp.zeros((B, H, hd), jnp.float32),
     )
     (m, l, acc), _ = jax.lax.scan(body, init, cols)
-    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    if not score_masses:
+        return out
+    lsafe = jnp.maximum(l, 1e-30)
+
+    def mass_tile(_, tb):
+        s, mh = tile_logits(tb)
+        p = jnp.where(mh, jnp.exp(s - m[..., None]), 0.0) / lsafe[..., None]
+        return None, p  # (B, H, bs)
+
+    _, tiles = jax.lax.scan(mass_tile, None, cols)  # (nb, B, H, bs)
+    nb = cols.shape[0]
+    masses = jnp.moveaxis(tiles, 0, 2).reshape(B, H, nb * bs)
+    return out, masses
 
 
 # ---------------------------------------------------------------------------

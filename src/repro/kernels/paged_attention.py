@@ -189,3 +189,182 @@ def paged_decode_attention_pallas(
         interpret=interpret,
     )(table.astype(jnp.int32), new_pos.astype(jnp.int32), win,
       q, k_pool, v_pool, mask_pool, pos_pool)
+
+
+# ---------------------------------------------------------------------------
+# fused masses: decode attention + per-key softmax masses in one pass
+# ---------------------------------------------------------------------------
+#
+# The decode-eviction scorer needs the probability mass the query token put
+# on every cached row — the single-token analogue of the fused chunk-score
+# kernel in ``chunk_attention.py``, and it reuses that kernel's two-phase
+# trick: the grid's innermost axis runs 2*nb steps.  Phase 0 (j < nb) is the
+# unmodified flash recurrence; once it ends, the scratch holds the *final*
+# (m, l) statistics, so phase 1 (j >= nb) revisits each key tile, recomputes
+# the scaled logits (cheap: one (block_size, hd) matmul), and emits the
+# normalized masses ``exp(s - m) / l`` per row.  V tiles park on the null
+# block during phase 1 (they are not read), and the mass output block parks
+# on tile 0 during phase 0 — safe because phase 1's first step overwrites it
+# before the pipeline's write-back moves on.  The attention output is
+# *bitwise* the plain kernel's: phase 0 is the same instruction sequence.
+
+
+def _masses_tile(j, nb, q_ref, k_ref, v_ref, ok, o_ref, mass_ref,
+                 m_scr, l_scr, acc_scr, scale):
+    phase0 = j < nb
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)  # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (block_size, hd)
+    s = (k @ q) * scale
+    s = jnp.where(ok, s, NEG_INF)
+
+    @pl.when(phase0)
+    def _flash():
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[0] = l_scr[0] * corr + p.sum()
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[0] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(phase0))
+    def _masses():
+        l = jnp.maximum(l_scr[0], 1e-30)
+        mass_ref[0, 0, :] = jnp.where(ok, jnp.exp(s - m_scr[0]), 0.0) / l
+
+
+def _masses_kernel(tbl_ref, q_ref, k_ref, v_ref, mask_ref, o_ref, mass_ref,
+                   m_scr, l_scr, acc_scr, *, nb, scale):
+    ok = mask_ref[0, :, 0]
+    _masses_tile(pl.program_id(2), nb, q_ref, k_ref, v_ref, ok, o_ref,
+                 mass_ref, m_scr, l_scr, acc_scr, scale)
+
+
+def _masses_kernel_windowed(tbl_ref, npos_ref, win_ref, q_ref, k_ref, v_ref,
+                            mask_ref, pos_ref, o_ref, mass_ref,
+                            m_scr, l_scr, acc_scr, *, nb, scale):
+    b = pl.program_id(0)
+    pos = pos_ref[0, :, 0]
+    ok = mask_ref[0, :, 0] & ((npos_ref[b] - pos) < win_ref[0])
+    _masses_tile(pl.program_id(2), nb, q_ref, k_ref, v_ref, ok, o_ref,
+                 mass_ref, m_scr, l_scr, acc_scr, scale)
+
+
+def paged_decode_masses_pallas(
+    q: jnp.ndarray,  # (B, H, hd)
+    k_pool: jnp.ndarray,  # (N, block_size, KV, hd)
+    v_pool: jnp.ndarray,
+    mask_pool: jnp.ndarray,  # (N, block_size, KV)
+    table: jnp.ndarray,  # (B, nb) int32
+    *,
+    pos_pool: jnp.ndarray | None = None,
+    new_pos: jnp.ndarray | None = None,
+    window=None,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Paged flash decode that also returns the query's normalized softmax
+    masses over every table row: (out (B, H, hd), masses (B, H, nb*bs) f32).
+    ``out`` is bitwise ``paged_decode_attention_pallas``; masked rows carry
+    exact-zero mass.  Oracle: ``ref.paged_decode_masses``."""
+    B, H, hd = q.shape
+    N, bs, KV, _ = k_pool.shape
+    nb = table.shape[1]
+    group = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    scratch_shapes = [
+        pltpu.VMEM((1,), jnp.float32),
+        pltpu.VMEM((1,), jnp.float32),
+        pltpu.VMEM((hd,), jnp.float32),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        jax.ShapeDtypeStruct((B, H, nb * bs), jnp.float32),
+    ]
+
+    def _ib(j):  # key-block index: phase 0 walks 0..nb-1, phase 1 repeats it
+        return jnp.where(j < nb, j, j - nb)
+
+    if window is None:
+        kernel = functools.partial(_masses_kernel, nb=nb, scale=scale)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, 2 * nb),
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda b, h, j, tbl: (b, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, h, j, tbl, g=group:
+                             (tbl[b, _ib(j)], 0, h // g, 0)),
+                pl.BlockSpec((1, bs, 1, hd),  # v: park on null block in ph. 1
+                             lambda b, h, j, tbl, g=group:
+                             (jnp.where(j < nb, tbl[b, _ib(j)], 0), 0,
+                              h // g, 0)),
+                pl.BlockSpec((1, bs, 1),
+                             lambda b, h, j, tbl, g=group:
+                             (tbl[b, _ib(j)], 0, h // g)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, hd), lambda b, h, j, tbl: (b, h, 0)),
+                pl.BlockSpec((1, 1, bs),
+                             lambda b, h, j, tbl:
+                             (b, h, jnp.where(j < nb, 0, j - nb))),
+            ],
+            scratch_shapes=scratch_shapes,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(table.astype(jnp.int32), q, k_pool, v_pool, mask_pool)
+
+    assert pos_pool is not None and new_pos is not None, \
+        "sliding-window masking needs pos_pool and new_pos"
+    kernel = functools.partial(_masses_kernel_windowed, nb=nb, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # table, new_pos, window
+        grid=(B, H, 2 * nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, t, n, w: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, t, n, w, g=group:
+                         (t[b, _ib(j)], 0, h // g, 0)),
+            pl.BlockSpec((1, bs, 1, hd),  # v: park on null block in phase 1
+                         lambda b, h, j, t, n, w, g=group:
+                         (jnp.where(j < nb, t[b, _ib(j)], 0), 0, h // g, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, j, t, n, w, g=group:
+                         (t[b, _ib(j)], 0, h // g)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, j, t, n, w, g=group:
+                         (t[b, _ib(j)], 0, h // g)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, t, n, w: (b, h, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, j, t, n, w:
+                         (b, h, jnp.where(j < nb, 0, j - nb))),
+        ],
+        scratch_shapes=scratch_shapes,
+    )
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(table.astype(jnp.int32), new_pos.astype(jnp.int32), win,
+      q, k_pool, v_pool, mask_pool, pos_pool)

@@ -295,3 +295,51 @@ def paged_decode_attention(
     KV = mask_pool.shape[2]
     alive = jnp.repeat(mask.any(axis=1), H // KV, axis=1)  # (B, H)
     return jnp.where(alive[..., None], out, 0.0).astype(out.dtype)
+
+
+def paged_decode_masses(
+    q: jnp.ndarray,  # (B, H, hd) single query token
+    k_pool: jnp.ndarray,  # (N, block_size, KV, hd) shared block pool
+    mask_pool: jnp.ndarray,  # (N, block_size, KV) per-head validity
+    table: jnp.ndarray,  # (B, nb) int32 physical block ids (0 = null)
+    *,
+    pos_pool: jnp.ndarray | None = None,
+    new_pos: jnp.ndarray | None = None,
+    window=None,
+    depth: int | None = None,
+) -> jnp.ndarray:
+    """Dense oracle for the decode token's per-key softmax masses over a
+    paged cache: (B, H, S) f32, S = nb*block_size (or ``depth``).
+
+    Row j holds the normalized probability the query puts on logical cache
+    row j — the decode-time analogue of ``chunk_column_masses``, streamed
+    into cumulative H2O scores by the serving engine's decode-eviction
+    sweep.  Masked rows contribute *exact zeros* and a sequence/head with
+    no attendable row is all-zero (``l -> max(l, eps)``), matching the
+    flash kernels — so accumulating masses over steps reproduces the dense
+    ``decode_attention_step_evicting`` score recurrence, which adds
+    ``where(mask, probs, 0)`` each step."""
+    mask = gather_paged(mask_pool, table)  # (B, S, KV)
+    k = gather_paged(k_pool, table)
+    if depth is not None:
+        k, mask = k[:, :depth], mask[:, :depth]
+    if window is not None:
+        assert pos_pool is not None and new_pos is not None, \
+            "sliding-window masking needs pos_pool and new_pos"
+        pos = gather_paged(pos_pool, table)
+        if depth is not None:
+            pos = pos[:, :depth]
+        mask = mask & ((new_pos[:, None, None] - pos) < window)
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    kf = _expand_gqa(k, group)
+    logits = jnp.einsum(
+        "bhd,bkhd->bhk", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    ok = jnp.repeat(jnp.moveaxis(mask, 2, 1), group, axis=1)  # (B, H, S)
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.where(ok, jnp.exp(logits - m), 0.0)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return p / l

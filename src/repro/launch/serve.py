@@ -22,8 +22,9 @@ from repro.configs import get_config, get_smoke_config
 from repro.core import policies
 from repro.core.lookahead import init_lookahead_params
 from repro.models import transformer as tf
-from repro.serving import (BucketedEngine, ContinuousEngine, KVBlockPool,
-                           PrefixCache, Request, ServingEngine)
+from repro.serving import (BucketedEngine, ChunkingConfig, ContinuousEngine,
+                           DecodeEvictionConfig, KVBlockPool, PrefixCache,
+                           Request, ServingConfig, ServingEngine)
 
 
 def main():
@@ -57,6 +58,16 @@ def main():
                          "caches, the old behavior)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="rows per KV pool block (with --kv-pool-mb)")
+    ap.add_argument("--decode-evict", action="store_true",
+                    help="decoding-stage eviction: with --kv-pool-mb the "
+                         "cache grows block-by-block and periodic sweeps "
+                         "re-evict it to the budget, freeing blocks "
+                         "mid-generation; dense engines cap the cache at a "
+                         "small fixed margin instead")
+    ap.add_argument("--decode-evict-interval", type=int, default=64,
+                    help="rows of decode growth between eviction sweeps "
+                         "(paged pool; bounds a slot's footprint at "
+                         "capacity + interval rows)")
     ap.add_argument("--mesh-model", type=int, default=1,
                     help="tensor-parallel shards: serve one sharded model "
                          "over a (data, model) device mesh (continuous "
@@ -129,13 +140,25 @@ def main():
                 prefix_cache = PrefixCache(
                     chunk=args.chunk,
                     max_bytes=args.prefix_cache_mb << 20, pool=kv_pool)
-            eng = ContinuousEngine(
-                params, cfg, policy=args.policy,
+            decode_evict = args.decode_evict
+            if decode_evict and kv_pool is not None and mesh is not None:
+                print("note: decode-time eviction on the paged pool is "
+                      "single-device; ignoring --decode-evict under "
+                      "--mesh-model")
+                decode_evict = False
+            sc = ServingConfig(
+                policy=args.policy,
                 evict=EvictionConfig(budget=args.budget, draft_len=8),
-                lkv_params=lkv, num_slots=args.slots, chunk=args.chunk,
-                max_context=max(args.n_in, args.chunk),
-                max_new_tokens=args.max_new, eos_id=-1,
-                prefix_cache=prefix_cache, kv_pool=kv_pool, mesh=mesh)
+                decode_evict=DecodeEvictionConfig(
+                    enabled=decode_evict,
+                    interval=args.decode_evict_interval),
+                chunking=ChunkingConfig(
+                    chunk=args.chunk,
+                    max_context=max(args.n_in, args.chunk)),
+                num_slots=args.slots, max_new_tokens=args.max_new,
+                eos_id=-1, prefix_cache=prefix_cache, kv_pool=kv_pool,
+                mesh=mesh)
+            eng = ContinuousEngine(params, cfg, sc, lkv_params=lkv)
         shared = (args.shared_prefix // args.chunk) * args.chunk
         system = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
         lens = rng.integers(args.n_in // 2, args.n_in + 1, args.requests)
@@ -164,6 +187,10 @@ def main():
                   f"{eng.stats['preemptions']} preemptions, "
                   f"{s['blocks_pinned_prefix']} blocks pinned by the "
                   f"prefix cache")
+            if eng.stats.get("decode_evict_sweeps") is not None:
+                print(f"decode eviction: {eng.stats['decode_evict_sweeps']} "
+                      f"sweeps reclaimed {s['blocks_reclaimed_decode']} "
+                      f"blocks mid-generation")
     else:
         with warnings.catch_warnings():  # explicit lockstep-baseline request
             warnings.simplefilter("ignore", DeprecationWarning)

@@ -617,8 +617,18 @@ def decode_attention_step_paged(
     policy).  The kernel path is exact-parity within fp tolerance
     (tests/test_paged_decode.py) and is held to a roofline bandwidth
     budget by ``benchmarks/bench_kernels.py``.
+
+    Decode-time eviction rides an optional ``"score"`` leaf in the pool
+    slice: when present ((B, depth, KV) cumulative softmax masses), the
+    attention call fuses the step's per-row masses
+    (``score_masses=True``) and the updated accumulator is returned in
+    the new cache dict — the streaming analogue of the dense
+    ``decode_attention_step_evicting`` score recurrence, consumed by the
+    serving engine's periodic evict-and-compact sweep.  The attention
+    output is bitwise unchanged by scoring on every kernel tier.
     """
     pool = inp.cache  # this layer's pool slice
+    score = pool.get("score")  # (B, depth, KV) decode-eviction masses
     B = h1.shape[0]
     KV = a.num_kv_heads
     bs = pool["k"].shape[1]
@@ -643,6 +653,9 @@ def decode_attention_step_paged(
     pb = jnp.where(write_ok, pb, 0)
     smesh = model_shard_mesh(inp.mesh, a)
     if smesh is not None:
+        assert score is None, \
+            "decode-time eviction scoring is single-device (the engine " \
+            "rejects mesh + decode_evict on the paged pool)"
         out, pk, pv, ppos, pmask = _sharded_paged_decode(
             q[:, 0], k_new[:, 0], v_new[:, 0], pool, table, pb, off,
             write_ok, new_pos[:, 0], inp.positions[:, 0],
@@ -659,12 +672,23 @@ def decode_attention_step_paged(
     # -- attend in pool layout: the kernel streams tiles through the
     # block table, the jnp gather fallback reproduces the dense step's
     # exact reduction (no dense view is built here on any path) --
-    out = ops.paged_decode_attention(
-        q[:, 0], pk, pv, pmask, table, pos_pool=ppos,
-        new_pos=inp.positions[:, 0], window=window, depth=depth)
+    new_cache = {"k": pk, "v": pv, "pos": ppos, "mask": pmask}
+    if score is not None:
+        from repro.core.scoring import decode_mass_update
+
+        out, masses = ops.paged_decode_attention(
+            q[:, 0], pk, pv, pmask, table, pos_pool=ppos,
+            new_pos=inp.positions[:, 0], window=window, depth=depth,
+            score_masses=True)
+        new_cache["score"] = score + decode_mass_update(
+            masses, KV, active=write_ok)
+    else:
+        out = ops.paged_decode_attention(
+            q[:, 0], pk, pv, pmask, table, pos_pool=ppos,
+            new_pos=inp.positions[:, 0], window=window, depth=depth)
     out = out.reshape(B, 1, a.q_dim)
     out = linear(out, p["wo"])
-    return out, {"k": pk, "v": pv, "pos": ppos, "mask": pmask}
+    return out, new_cache
 
 
 def cross_attention(

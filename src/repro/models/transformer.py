@@ -1117,6 +1117,13 @@ def decode_step(
     the Pallas kernel path attends in pool layout (dead rows beyond it
     are masked), while the jnp gather fallback slices its view to it so
     that path stays shape- and bit-identical to dense serving.
+
+    Decode-time eviction scoring needs no plumbing here: when the serving
+    engine threads a ``"score"`` leaf ((L, B, depth, KV) cumulative
+    masses) inside ``cache["pool"]``, the layer scan slices it per layer
+    like any other pool leaf and ``decode_attention_step_paged`` returns
+    the accumulated copy in its cache dict, so the updated buffer rides
+    ``ys`` back out with zero signature changes.
     """
     a = cfg.attn
     paged = "pool" in cache

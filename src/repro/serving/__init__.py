@@ -7,6 +7,10 @@
                    deprecated bucket utilities
     kv_pool.py   — KVBlockPool: paged decode-KV memory (per-layer device
                    block pool, free-list allocator, refcounted blocks)
+    config.py    — ServingConfig / DecodeEvictionConfig / ChunkingConfig:
+                   the unified engine configuration (one object instead of
+                   the historical kwarg pile; legacy kwargs still map
+                   through ``ServingConfig.from_legacy``)
     prefix_cache.py — radix-trie prompt cache: refcounted chunk-boundary
                    (KV, ScoreState) snapshots shared across requests,
                    optionally pinned as block runs in the KV pool
@@ -19,6 +23,8 @@
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     PrefillCompileCache, batch_bucket,
                                     bucket_for, pad_to_bucket)
+from repro.serving.config import (ChunkingConfig, DecodeEvictionConfig,
+                                  ServingConfig)
 from repro.serving.engine import (BucketedEngine, ContinuousEngine, Request,
                                   RequestState, ServingEngine, cache_bytes)
 from repro.serving.kv_pool import KVBlockPool
@@ -26,9 +32,10 @@ from repro.serving.prefix_cache import PrefixCache, PrefixEntry
 from repro.serving.scheduler import SlotScheduler, plan_step
 
 __all__ = [
-    "BucketedEngine", "ChunkCompileCache", "ContinuousEngine",
-    "DEFAULT_BUCKETS", "KVBlockPool", "PrefillCompileCache", "PrefixCache",
-    "PrefixEntry", "Request", "RequestState", "ServingEngine",
+    "BucketedEngine", "ChunkCompileCache", "ChunkingConfig",
+    "ContinuousEngine", "DEFAULT_BUCKETS", "DecodeEvictionConfig",
+    "KVBlockPool", "PrefillCompileCache", "PrefixCache", "PrefixEntry",
+    "Request", "RequestState", "ServingConfig", "ServingEngine",
     "SlotScheduler", "batch_bucket", "bucket_for", "cache_bytes",
     "pad_to_bucket", "plan_step",
 ]

@@ -1,0 +1,181 @@
+"""Unified serving configuration: one ``ServingConfig`` object instead of
+the ~17 keyword arguments ``ContinuousEngine`` historically grew.
+
+Grouping
+--------
+``ServingConfig`` holds the per-engine scalars (policy, slots, caps) plus
+grouped sub-configs:
+
+* ``evict``        — prefill eviction (``common.config.EvictionConfig``)
+* ``decode_evict`` — decoding-stage eviction (``DecodeEvictionConfig``):
+  the one schema consumed by all three engines.  The deprecated dense
+  engines use ``margin_rows`` to size their fixed cache margin; the paged
+  ``ContinuousEngine`` uses ``interval`` as the sweep period — its cache
+  grows block-by-block and is compacted back to ``capacity`` every
+  ``interval`` generated rows, returning the freed blocks to the pool.
+* ``chunking``     — prefill chunk geometry and the token-budget step.
+
+Live objects (``kv_pool``, ``prefix_cache``, ``sampling``, ``mesh``) ride
+the config as plain fields: they configure the engine exactly like the
+old kwargs did, they are just no longer positional noise.
+
+Backwards compatibility: ``ServingConfig.from_legacy`` maps the old
+kwarg names; ``ContinuousEngine(params, cfg, **old_kwargs)`` still works
+through it (with a ``DeprecationWarning``), and ``decode_evict`` accepts
+a plain bool anywhere via ``DecodeEvictionConfig.coerce``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.common.config import EvictionConfig
+
+__all__ = ["ChunkingConfig", "DecodeEvictionConfig", "ServingConfig"]
+
+
+@dataclass(frozen=True)
+class DecodeEvictionConfig:
+    """Decoding-stage eviction (beyond-paper), one schema for all engines.
+
+    ``enabled=False`` keeps the pre-eviction behavior: the decode cache
+    holds ``max_new_tokens + 1`` append rows so a generation can never
+    overrun it.  Enabled:
+
+    * dense engines — the cache keeps only ``margin`` append rows; once
+      full, each new token overwrites the lowest cumulative-attention
+      slot in-step (``attention.decode_attention_step_evicting``).
+    * paged ``ContinuousEngine`` — the cache grows block-by-block and a
+      periodic sweep (every ``interval`` generated rows) re-evicts it
+      down to ``capacity`` under the streamed H2O masses, compacts the
+      kept rows into the head of the block run and frees the tail
+      blocks back to the ``KVBlockPool``.
+    """
+
+    enabled: bool = False
+    # paged: rows of decode growth between sweeps.  Reclaim granularity
+    # is the pool block — intervals below ``block_size`` still compact
+    # correctly but free no whole block, so size interval >= block_size
+    # (ideally a multiple) for the sweeps to actually return memory.
+    interval: int = 64
+    margin: int = 8  # dense: append rows kept beyond the eviction capacity
+
+    def __post_init__(self):
+        assert self.interval >= 1, "sweep interval must be >= 1 row"
+        assert self.margin >= 1, "decode margin must be >= 1 row"
+
+    @classmethod
+    def coerce(cls, value) -> "DecodeEvictionConfig":
+        """Accept the legacy ``decode_evict`` spellings: a bool (the old
+        kwarg), None, or an already-built config."""
+        if isinstance(value, cls):
+            return value
+        if value is None:
+            return cls()
+        assert isinstance(value, bool), \
+            f"decode_evict must be a bool or DecodeEvictionConfig, got " \
+            f"{type(value).__name__}"
+        return cls(enabled=value)
+
+    def margin_rows(self, max_new_tokens: int) -> int:
+        """Dense-cache append rows beyond the eviction capacity — the
+        thrice-copied ``8 if decode_evict else max_new_tokens + 1`` rule
+        all three engines used to inline."""
+        return self.margin if self.enabled else max_new_tokens + 1
+
+
+@dataclass(frozen=True)
+class ChunkingConfig:
+    """Streaming-prefill geometry of the chunked continuous engine."""
+
+    chunk: int = 128  # prefill chunk rows (one compiled (1, chunk) program)
+    max_context: int = 1024  # base KV-buffer rung; longer prompts climb
+    token_budget: Optional[int] = None  # per-step budget (None: derived)
+    decode_chunk: int = 8  # largest jitted decode chunk
+
+    def __post_init__(self):
+        assert self.chunk >= 1 and self.decode_chunk >= 1
+
+
+# legacy ContinuousEngine kwarg -> (ServingConfig path, coercion)
+_LEGACY_FIELDS = {
+    "policy": "policy",
+    "evict": "evict",
+    "num_slots": "num_slots",
+    "max_new_tokens": "max_new_tokens",
+    "eos_id": "eos_id",
+    "decode_evict": "decode_evict",
+    "chunk": "chunking.chunk",
+    "max_context": "chunking.max_context",
+    "token_budget": "chunking.token_budget",
+    "decode_chunk": "chunking.decode_chunk",
+    "sampling": "sampling",
+    "kv_pool": "kv_pool",
+    "prefix_cache": "prefix_cache",
+    "reserve_appends": "reserve_appends",
+    "capture_admission": "capture_admission",
+    "mesh": "mesh",
+}
+
+
+@dataclass
+class ServingConfig:
+    """Everything that shapes a ``ContinuousEngine``, in one object."""
+
+    policy: str = "lookaheadkv"
+    evict: EvictionConfig = field(default_factory=EvictionConfig)
+    decode_evict: DecodeEvictionConfig = field(
+        default_factory=DecodeEvictionConfig)
+    chunking: ChunkingConfig = field(default_factory=ChunkingConfig)
+    num_slots: int = 4
+    max_new_tokens: int = 64  # per-request cap (sizes the cache margin)
+    eos_id: int = 0
+    sampling: Any = None  # policies.Sampling | None (None = greedy)
+    kv_pool: Any = None  # serving.kv_pool.KVBlockPool | None
+    prefix_cache: Any = None  # serving.prefix_cache.PrefixCache | None
+    reserve_appends: bool = True  # guarantee admitted requests' growth
+    capture_admission: bool = False  # stash mask/pos on each Request
+    mesh: Any = None  # ("data", "model") mesh: tensor-parallel serving
+
+    def __post_init__(self):
+        self.decode_evict = DecodeEvictionConfig.coerce(self.decode_evict)
+        if self.evict is None:
+            self.evict = EvictionConfig()
+
+    @classmethod
+    def from_legacy(cls, **kwargs) -> "ServingConfig":
+        """Build a config from the old ``ContinuousEngine.__init__`` kwarg
+        names (the deprecation shim).  Unknown names raise, exactly like
+        the old signature would."""
+        unknown = set(kwargs) - set(_LEGACY_FIELDS)
+        if unknown:
+            raise TypeError(
+                f"unknown ContinuousEngine kwargs: {sorted(unknown)}")
+        top: dict = {}
+        chunking: dict = {}
+        for name, value in kwargs.items():
+            path = _LEGACY_FIELDS[name]
+            if path.startswith("chunking."):
+                chunking[path.split(".", 1)[1]] = value
+            else:
+                top[path] = value
+        if chunking:
+            top["chunking"] = ChunkingConfig(**chunking)
+        return cls(**top)
+
+    def legacy_kwargs(self) -> dict:
+        """The old kwarg dict equivalent to this config (round-trip
+        companion of ``from_legacy``; ``decode_evict`` stays a config —
+        ``from_legacy`` coerces bools, not the reverse)."""
+        out = {}
+        for name, path in _LEGACY_FIELDS.items():
+            obj: Any = self
+            for part in path.split("."):
+                obj = getattr(obj, part)
+            out[name] = obj
+        return out
+
+    def replace(self, **changes) -> "ServingConfig":
+        return dataclasses.replace(self, **changes)

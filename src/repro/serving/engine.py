@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from functools import partial
 from typing import Optional
 
 import jax
@@ -47,18 +48,23 @@ import numpy as np
 
 from repro.common.config import EvictionConfig, ModelConfig
 from repro.core import policies
+from repro.core.eviction import select_topk
 from repro.kernels import ops
+from repro.kernels.ref import NEG_INF
 from repro.models import transformer as tf
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     PrefillCompileCache, _batch_bucket,
                                     _bucket_for, _pad_to_bucket)
+from repro.serving.config import (ChunkingConfig, DecodeEvictionConfig,
+                                  ServingConfig)
 from repro.serving.kv_pool import KVBlockPool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (Request, RequestState, SlotScheduler,
                                      plan_step)
 
 __all__ = ["Request", "RequestState", "ServingEngine", "ContinuousEngine",
-           "BucketedEngine", "cache_bytes"]
+           "BucketedEngine", "ServingConfig", "DecodeEvictionConfig",
+           "ChunkingConfig", "cache_bytes", "paged_sweep"]
 
 
 def cache_bytes(cfg: ModelConfig, capacity: int, n_in: int) -> dict:
@@ -93,6 +99,81 @@ def _snapshot(arr: np.ndarray) -> jnp.ndarray:
     return jnp.asarray(c)
 
 
+@partial(jax.jit,
+         static_argnames=("capacity", "depth", "block_size", "nb_keep"))
+def paged_sweep(pool: dict, score: jnp.ndarray, table: jnp.ndarray,
+                slot: jnp.ndarray, *, capacity: int, depth: int,
+                block_size: int, nb_keep: int) -> tuple[dict, jnp.ndarray]:
+    """Evict-and-compact one slot's paged decode cache in place.
+
+    The device half of a decode-eviction sweep: gather the slot's dense
+    ``[0, depth)`` view through its block table, keep the ``capacity``
+    highest cumulative-attention rows per (layer, kv head) — the same
+    H2O heavy-hitter rule the dense ``decode_attention_step_evicting``
+    applies per step, batched over the whole window — compact them into
+    the first ``nb_keep`` blocks of the run (temporal order preserved,
+    exactly like prefill eviction), and zero everything past them.  The
+    host then frees the tail blocks ``[nb_keep, nb)`` back to the pool
+    and resets the slot's cursor to ``capacity``.
+
+    Every block covering ``[0, depth)`` must be real (non-null) when
+    this runs — the host fills table gaps first — because the compacted
+    rows are scattered back through those same table entries.
+
+    ``score`` is the engine's ``(L, num_slots, depth, KV)`` cumulative
+    mass buffer; kept rows carry their tallies across sweeps (H2O
+    semantics), evicted and padded rows restart at zero.
+    """
+    bs = block_size
+    nb = -(-depth // bs)  # blocks covering logical rows [0, depth)
+    row = table[slot, :nb]  # (nb,) physical block ids
+
+    def dense(leaf):  # (L, NB, bs, ...) -> (L, depth, ...)
+        g = leaf[:, row]
+        return g.reshape((g.shape[0], nb * bs) + g.shape[3:])[:, :depth]
+
+    k = dense(pool["k"])  # (L, depth, KV, hd)
+    v = dense(pool["v"])
+    pos = dense(pool["pos"])  # (L, depth, KV)
+    mask = dense(pool["mask"])
+    sc = score[:, slot]  # (L, depth, KV) cumulative masses
+    # top-capacity rows per (layer, kv head); invalid rows can never win
+    # except on overflow, where their gathered mask stays False
+    sel = jnp.moveaxis(jnp.where(mask, sc, NEG_INF), 1, 2)  # (L, KV, depth)
+    idx, selmask = select_topk(sel, capacity)  # (L, KV, cap), temporal order
+
+    def take(x):  # (L, depth, KV[, hd]) -> (L, cap, KV[, hd])
+        xt = jnp.moveaxis(x, 1, 2)  # (L, KV, depth, ...)
+        ix = idx if xt.ndim == 3 else idx[..., None]
+        g = jnp.take_along_axis(xt, ix.astype(jnp.int32), axis=2)
+        return jnp.moveaxis(g, 2, 1)
+
+    kept = take(mask) & jnp.moveaxis(selmask, 1, 2)  # (L, cap, KV)
+    k = jnp.where(kept[..., None], take(k), 0)
+    v = jnp.where(kept[..., None], take(v), 0)
+    pos = jnp.where(kept, take(pos), 0)
+    sc_keep = jnp.where(kept, take(sc), 0.0)
+
+    def pad(x, rows):  # (L, cap, ...) -> (L, rows, ...)
+        cfgpad = [(0, 0)] * x.ndim
+        cfgpad[1] = (0, rows - x.shape[1])
+        return jnp.pad(x, cfgpad)
+
+    def blk(x):  # (L, cap, ...) -> (L, nb_keep, bs, ...)
+        x = pad(x, nb_keep * bs)
+        return x.reshape((x.shape[0], nb_keep, bs) + x.shape[2:])
+
+    keep_ids = row[:nb_keep]
+    newpool = {
+        "k": pool["k"].at[:, keep_ids].set(blk(k)),
+        "v": pool["v"].at[:, keep_ids].set(blk(v)),
+        "pos": pool["pos"].at[:, keep_ids].set(blk(pos)),
+        "mask": pool["mask"].at[:, keep_ids].set(blk(kept)),
+    }
+    score = score.at[:, slot].set(pad(sc_keep, depth))
+    return newpool, score
+
+
 class ServingEngine:
     """Deprecated lockstep batch engine: every request in a batch shares one
     prompt length, and prefill/decode run back-to-back for the whole batch.
@@ -125,8 +206,10 @@ class ServingEngine:
         # decoding-stage eviction (beyond-paper): the cache stays at
         # ``budget + margin`` even for long generations — new tokens evict
         # the lowest cumulative-attention slots once capacity is reached.
-        self.decode_evict = decode_evict
-        self.decode_margin = (8 if decode_evict else max_new_tokens + 1)
+        # The dense engines only consume the margin rule; the paged
+        # ContinuousEngine also reads ``interval`` (sweep period).
+        self.decode_evict = DecodeEvictionConfig.coerce(decode_evict)
+        self.decode_margin = self.decode_evict.margin_rows(max_new_tokens)
         self._prefill_fn = jax.jit(self._prefill)
         self._decode_fn = jax.jit(self._decode)
 
@@ -138,7 +221,7 @@ class ServingEngine:
             draft_cfg=self.draft_cfg, extra_slots=self.decode_margin,
             seeds=seeds,
         )
-        if self.decode_evict:
+        if self.decode_evict.enabled:
             res = res._replace(cache=tf.add_decode_eviction_scores(res.cache))
         return res
 
@@ -264,7 +347,14 @@ class _SlotDecodeMixin:
             if finished or remaining[slot] <= 0:
                 sched.retire(r, now=now)
                 active[slot] = False
+                self._on_retire(slot, r)
                 self._release_slot(slot)
+
+    def _on_retire(self, slot: int, req: Request) -> None:
+        """Retirement hook, called while the slot's cache still exists:
+        the paged engine captures the request's final kept set here when
+        ``capture_admission`` asks for it (the paged counterpart of the
+        dense engines' inspectable slot cache)."""
 
     def _release_slot(self, slot: int) -> None:
         """Retirement hook: the paged engine returns the slot's KV blocks
@@ -311,25 +401,33 @@ class ContinuousEngine(_SlotDecodeMixin):
         self,
         params: dict,
         cfg: ModelConfig,
+        config: Optional[ServingConfig] = None,
         *,
-        policy: str = "lookaheadkv",
-        evict: Optional[EvictionConfig] = None,
         lkv_params: Optional[dict] = None,
-        num_slots: int = 4,
-        chunk: int = 128,
-        max_context: int = 1024,  # initial KV-buffer depth; grows on demand
-        token_budget: Optional[int] = None,
-        max_new_tokens: int = 64,  # per-request cap (sizes the cache margin)
-        eos_id: int = 0,
-        decode_evict: bool = False,
-        decode_chunk: int = 8,
-        prefix_cache: Optional[PrefixCache] = None,
-        kv_pool: Optional[KVBlockPool] = None,  # paged decode-KV memory
-        reserve_appends: bool = True,  # guarantee admitted requests' growth
-        capture_admission: bool = False,  # stash mask/pos on each Request
-        sampling: Optional[policies.Sampling] = None,  # None = greedy
-        mesh=None,  # ("data","model") mesh: tensor-parallel serving
+        **legacy,
     ):
+        if legacy:
+            assert config is None, \
+                "pass either a ServingConfig or legacy kwargs, not both"
+            warnings.warn(
+                "ContinuousEngine(**kwargs) is deprecated; build a "
+                "serving.config.ServingConfig and pass it as ``config`` "
+                "(see the README's Serving API migration table)",
+                DeprecationWarning, stacklevel=2)
+            config = ServingConfig.from_legacy(**legacy)
+        elif config is None:
+            config = ServingConfig()
+        self.config = config
+        policy = config.policy
+        num_slots = config.num_slots
+        chunk = config.chunking.chunk
+        max_context = config.chunking.max_context
+        token_budget = config.chunking.token_budget
+        decode_chunk = config.chunking.decode_chunk
+        max_new_tokens = config.max_new_tokens
+        kv_pool = config.kv_pool
+        prefix_cache = config.prefix_cache
+        mesh = config.mesh
         assert tf.chunkable(cfg), \
             "chunked continuous batching serves attention-only decoder archs"
         assert policy in policies.SINGLE_PASS and policy != "gt_oracle", \
@@ -340,7 +438,7 @@ class ContinuousEngine(_SlotDecodeMixin):
             "shape-uniform; use BucketedEngine"
         self.params, self.cfg = params, cfg
         self.policy = policy
-        self.evict = evict if evict is not None else EvictionConfig()
+        self.evict = config.evict
         self.lkv_params = lkv_params
         # tensor-parallel serving: commit the params to their param_specs
         # shardings (Megatron GQA rules — q/o on heads, k/v on kv heads
@@ -371,9 +469,17 @@ class ContinuousEngine(_SlotDecodeMixin):
         self.num_slots = num_slots
         self.chunk = chunk
         self.max_new_tokens = max_new_tokens
-        self.eos_id = eos_id
-        self.decode_evict = decode_evict
-        self.decode_margin = (8 if decode_evict else max_new_tokens + 1)
+        self.eos_id = config.eos_id
+        self.decode_evict = config.decode_evict
+        # one margin rule for all engines (serving/config.py): a dense
+        # cache keeps ``margin_rows`` append rows beyond the eviction
+        # capacity; the paged pool under decode eviction keeps
+        # ``interval`` rows — the growth window between evict-and-compact
+        # sweeps — instead of the worst-case ``max_new_tokens + 1``
+        if kv_pool is not None and self.decode_evict.enabled:
+            self.decode_margin = self.decode_evict.interval
+        else:
+            self.decode_margin = self.decode_evict.margin_rows(max_new_tokens)
         self._chunks = tuple(c for c in self._CHUNK_SIZES if c <= decode_chunk)
         self.token_budget = token_budget or (chunk + num_slots * decode_chunk)
         # the decode-slot capacity must be budget-bound, not context-bound,
@@ -397,7 +503,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         # top-p run inside the jitted decode chunk with per-request keys
         # folded on token position — greedy (None / temperature 0) keeps
         # the bit-exact differential contract
-        self.sampling = sampling
+        self.sampling = config.sampling
         self._seeds_h = np.zeros(num_slots, np.int32)
         # prefix-aware KV reuse: chunk-boundary (KV, ScoreState) snapshots
         # shared across requests via a radix trie (serving/prefix_cache.py).
@@ -412,10 +518,22 @@ class ContinuousEngine(_SlotDecodeMixin):
         # count (scheduler admission_gate) rather than slot count alone.
         self.pool = kv_pool
         self._paged_depth = self.capacity + self.decode_margin
+        # decode-time streaming eviction on the paged pool: the engine
+        # holds the per-slot cumulative attention masses (fed by the fused
+        # kernel's second output each decode chunk) and periodically
+        # evicts-and-compacts any slot whose cursor reaches the paged
+        # depth, freeing the tail blocks back to the pool mid-generation
+        self._score_dev: Optional[jnp.ndarray] = None
         if kv_pool is not None:
-            assert not decode_evict, \
-                "paged KV does not support decoding-stage eviction (its " \
-                "fixed-capacity cache never grows, so paging buys nothing)"
+            if self.decode_evict.enabled:
+                assert mesh is None, \
+                    "decode-time eviction on the paged pool is " \
+                    "single-device (mesh-sharded serving keeps the dense " \
+                    "decode_evict path)"
+                a = cfg.attn
+                self._score_dev = jnp.zeros(
+                    (cfg.num_layers, num_slots, self._paged_depth,
+                     a.num_kv_heads), jnp.float32)
             self._nb_max = kv_pool.blocks_for(self._paged_depth)
             assert kv_pool.usable_blocks >= self._nb_max + 1, \
                 "pool cannot hold even one request's worst-case cache; " \
@@ -438,7 +556,7 @@ class ContinuousEngine(_SlotDecodeMixin):
             # vLLM-style watermark.  Without it admission is optimistic
             # (more concurrency when generations end early) and the
             # preempt-to-queue path is the safety valve.
-            self.reserve_appends = reserve_appends
+            self.reserve_appends = config.reserve_appends
             self._slot_reserved = np.zeros(num_slots, np.int64)
             bs = kv_pool.block_size
             # block indices only decode appends can touch: [capacity, depth)
@@ -447,7 +565,7 @@ class ContinuousEngine(_SlotDecodeMixin):
             if prefix_cache is not None and prefix_cache.pool is not None:
                 assert prefix_cache.pool is kv_pool, \
                     "prefix cache bound to a different block pool"
-        self.capture_admission = capture_admission
+        self.capture_admission = config.capture_admission
 
     # -- compile-cache bodies ------------------------------------------------
     def _build(self, kind: str, policy: str):
@@ -464,7 +582,7 @@ class ContinuousEngine(_SlotDecodeMixin):
                     extra_slots=self.decode_margin, seeds=seeds,
                     mesh=self.mesh,
                 )
-                if self.decode_evict:
+                if self.decode_evict.enabled:
                     cache = tf.add_decode_eviction_scores(cache)
                 return cache
 
@@ -555,11 +673,13 @@ class ContinuousEngine(_SlotDecodeMixin):
         if self.pool is not None:
             sched.bind_pool(self.pool)
             live = None  # paged state: block tables + pool, no dense cache
+            if self._score_dev is not None:  # clean tallies across runs
+                self._score_dev = jnp.zeros_like(self._score_dev)
         else:
             live = tf.init_decode_cache(self.cfg, self.num_slots,
                                         self.capacity + self.decode_margin,
                                         per_slot_cursor=True)
-            if self.decode_evict:
+            if self.decode_evict.enabled:
                 live = tf.add_decode_eviction_scores(live)
         tok = jnp.zeros((self.num_slots, 1), jnp.int32)
         active = np.zeros(self.num_slots, bool)
@@ -590,6 +710,8 @@ class ContinuousEngine(_SlotDecodeMixin):
                               prefix_tokens_skipped=0)
         if self.pool is not None:
             self.stats.update(preemptions=0, admission_blocked=0)
+            if self._score_dev is not None:
+                self.stats["decode_evict_sweeps"] = 0
 
         try:
             self._run_loop(sched, tok, live, active, remaining, last_emit,
@@ -643,6 +765,20 @@ class ContinuousEngine(_SlotDecodeMixin):
                     since_decode = 0
                     steps = self._pick_chunk(remaining, active)
                     if self.pool is not None:
+                        if self._score_dev is not None:
+                            # decode-time eviction: compact every slot
+                            # whose cursor reached the paged depth, then
+                            # cap the chunk so no active cursor can
+                            # overrun the depth mid-chunk (the sweep
+                            # trigger is checked only between chunks)
+                            self._decode_evict_sweep(sched, active,
+                                                     remaining, last_emit)
+                            if not active.any():
+                                continue
+                            room = int(np.min(
+                                (self._paged_depth - self._cursor_h)[active]))
+                            steps = max(c for c in self._chunks
+                                        if c <= max(room, 1))
                         # grow every live slot's append blocks before the
                         # chunk runs — a missing block would null-route the
                         # appends; preempts the latest admission when dry
@@ -659,12 +795,20 @@ class ContinuousEngine(_SlotDecodeMixin):
                         # call returns, so a buffer we mutate in place
                         # below (cursor/npos advance, retirement
                         # bookkeeping) would race the device read
-                        tok, ptree, toks = fn(
-                            self.params, tok, self._table_dev,
-                            _snapshot(self._cursor_h),
-                            _snapshot(self._npos_h[:, None]),
-                            self.pool.tree(), _snapshot(active),
-                            _snapshot(self._seeds_h))
+                        if self._score_dev is not None:
+                            tok, ptree, toks, self._score_dev = fn(
+                                self.params, tok, self._table_dev,
+                                _snapshot(self._cursor_h),
+                                _snapshot(self._npos_h[:, None]),
+                                self.pool.tree(), _snapshot(active),
+                                _snapshot(self._seeds_h), self._score_dev)
+                        else:
+                            tok, ptree, toks = fn(
+                                self.params, tok, self._table_dev,
+                                _snapshot(self._cursor_h),
+                                _snapshot(self._npos_h[:, None]),
+                                self.pool.tree(), _snapshot(active),
+                                _snapshot(self._seeds_h))
                         self.pool.set_tree(ptree)
                         # mirror the device advance rule exactly: slots
                         # active at dispatch move `steps`, cursors clamp
@@ -803,6 +947,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         if first == self.eos_id or r.max_new_tokens <= 1:
             sched.retire(r, now=now)
             active[slot] = False
+            self._on_retire(slot, r)
             self._release_slot(slot)
         else:
             active[slot] = True
@@ -824,8 +969,15 @@ class ContinuousEngine(_SlotDecodeMixin):
         prompt of ``n_prompt`` tokens — the admission cost model.  Short
         prompts and tight budgets need fewer data blocks than the dense
         engine's uniform ``capacity + margin`` rows: that delta is the
-        concurrency eviction buys."""
+        concurrency eviction buys.  Under decode-time eviction the
+        worst case shrinks again — the slot's whole window is
+        ``capacity + interval`` rows instead of ``capacity +
+        max_new_tokens + 1`` — but sweeps eventually materialize *every*
+        block of it (gap blocks included), so the append promise is the
+        full window minus the admitted data blocks."""
         data = self.pool.blocks_for(min(n_prompt, self.capacity))
+        if self._score_dev is not None:
+            return data, self._nb_max - data
         appends = sum(1 for jb in self._append_jbs if jb >= data)
         return data, appends
 
@@ -882,7 +1034,12 @@ class ContinuousEngine(_SlotDecodeMixin):
         ids = self._alloc_blocks(self.pool.blocks_for(used))
         if ids is None:
             return None
-        outstanding = sum(1 for jb in self._append_jbs if jb >= len(ids))
+        if self._score_dev is not None:
+            # sweeps compact through every block of [0, depth), so gap
+            # blocks below the append window count toward the promise too
+            outstanding = self._nb_max - len(ids)
+        else:
+            outstanding = sum(1 for jb in self._append_jbs if jb >= len(ids))
         if self.reserve_appends and not self._reserve_blocks(outstanding):
             self.pool.free(ids)  # promise can't be kept: don't admit
             return None
@@ -897,28 +1054,171 @@ class ContinuousEngine(_SlotDecodeMixin):
         self._table_dev = _snapshot(self._table_h)
         self._cursor_h[slot] = self.capacity  # appends start where dense do
         self._npos_h[slot] = int(cache["next_pos"][0, 0])
+        if self._score_dev is not None:
+            # arm the slot's cumulative tallies exactly as the dense
+            # engine's add_decode_eviction_scores seeds its score field
+            # (finalize already attached it: valid kept rows = unit mass)
+            sc = cache["attn"]["score"]  # (L, 1, C, KV)
+            assert sc.shape[2] == self._paged_depth, \
+                "admitted cache depth must match the paged window"
+            self._seed_score(slot, sc)
         return slot
 
     def _decode_fn_paged(self, steps: int):
-        fn = self._decode_fns.get(("paged", steps))
+        scored = self._score_dev is not None
+        fn = self._decode_fns.get(("paged", steps, scored))
         if fn is None:
             depth = self._paged_depth
             sampling = self.sampling
             mesh = self.mesh
 
-            def body(params, tok, table, cursor, next_pos, pool, active,
-                     seeds):
-                cache = {"attn": {"table": table}, "pool": pool,
-                         "cursor": cursor, "next_pos": next_pos}
-                last, cache, toks = policies.decode_chunk(
-                    params, self.cfg, tok, cache, steps, active=active,
-                    paged_depth=depth, sampling=sampling, seeds=seeds,
-                    mesh=mesh)
-                return last, cache["pool"], toks
+            if scored:
+                # the score buffer rides *inside* the pool dict: the
+                # transformer layer scan slices its (L, S, depth, KV)
+                # leaf per layer like every other pool leaf, and the
+                # attention step adds the fused kernel's masses to it —
+                # no signature changes anywhere below decode_chunk
+                def body(params, tok, table, cursor, next_pos, pool,
+                         active, seeds, score):
+                    pool = dict(pool, score=score)
+                    cache = {"attn": {"table": table}, "pool": pool,
+                             "cursor": cursor, "next_pos": next_pos}
+                    last, cache, toks = policies.decode_chunk(
+                        params, self.cfg, tok, cache, steps, active=active,
+                        paged_depth=depth, sampling=sampling, seeds=seeds,
+                        mesh=mesh)
+                    newpool = dict(cache["pool"])
+                    newscore = newpool.pop("score")
+                    return last, newpool, toks, newscore
+            else:
+                def body(params, tok, table, cursor, next_pos, pool,
+                         active, seeds):
+                    cache = {"attn": {"table": table}, "pool": pool,
+                             "cursor": cursor, "next_pos": next_pos}
+                    last, cache, toks = policies.decode_chunk(
+                        params, self.cfg, tok, cache, steps, active=active,
+                        paged_depth=depth, sampling=sampling, seeds=seeds,
+                        mesh=mesh)
+                    return last, cache["pool"], toks
 
             fn = jax.jit(body)
-            self._decode_fns[("paged", steps)] = fn
+            self._decode_fns[("paged", steps, scored)] = fn
         return fn
+
+    def _seed_score(self, slot: int, score: jnp.ndarray) -> None:
+        """Write an admitted request's initial cumulative-score plane
+        ((L, 1, depth, KV), from ``add_decode_eviction_scores``) into the
+        engine's per-slot score buffer."""
+        fn = self._decode_fns.get("seed_score")
+        if fn is None:
+            def body(buf, sc, slot):
+                return buf.at[:, slot].set(sc[:, 0].astype(jnp.float32))
+
+            fn = jax.jit(body)
+            self._decode_fns["seed_score"] = fn
+        self._score_dev = fn(self._score_dev, score,
+                             jnp.asarray(slot, jnp.int32))
+
+    def _decode_evict_sweep(self, sched, active, remaining,
+                            last_emit) -> None:
+        """Evict-and-compact every live slot whose cursor reached the
+        paged depth: run the jitted ``paged_sweep`` (keep the
+        ``capacity`` heaviest rows, compact them into the head blocks),
+        free the tail blocks back to the pool mid-generation, and reset
+        the slot's cursor to ``capacity``.  Table gaps below the kept
+        window (short admissions never allocated them) are materialized
+        first — the compaction scatter needs real blocks to land in."""
+        bs = self.pool.block_size
+        nb = self.pool.blocks_for(self._paged_depth)
+        nb_keep = self.pool.blocks_for(self.capacity)
+        for slot in np.nonzero(active)[0].tolist():
+            if not active[slot]:
+                continue  # preempted by an earlier slot's gap fill
+            if int(self._cursor_h[slot]) < self._paged_depth:
+                continue
+            aborted = False
+            for jb in range(nb):
+                if self._table_h[slot, jb] != 0:
+                    continue
+                if self._slot_reserved[slot] > 0:
+                    ids = self.pool.alloc(1, from_reserved=True)
+                    assert ids is not None  # reserves stay on the free list
+                    self._slot_reserved[slot] -= 1
+                else:
+                    ids = self._alloc_blocks(1)
+                while ids is None:
+                    victim = self._latest_admitted_active(active)
+                    assert victim is not None, "pool exhausted with no slots"
+                    self._preempt(victim, sched, active, remaining,
+                                  last_emit)
+                    if not active[slot]:
+                        break  # this slot was its own latest admission
+                    ids = self._alloc_blocks(1)
+                if not active[slot]:
+                    aborted = True
+                    break
+                # a reallocated block may carry stale validity rows; the
+                # sweep *gathers* through the table before its scatter
+                # overwrites them, so invalidate up front
+                self.pool.zero_mask(ids)
+                self._table_h[slot, jb] = int(ids[0])
+                self._slot_blocks[slot].append(int(ids[0]))
+            if aborted:
+                continue
+            self._table_dev = _snapshot(self._table_h)
+            ptree, self._score_dev = paged_sweep(
+                self.pool.tree(), self._score_dev, self._table_dev,
+                jnp.asarray(slot, jnp.int32), capacity=self.capacity,
+                depth=self._paged_depth, block_size=bs, nb_keep=nb_keep)
+            self.pool.set_tree(ptree)
+            # the compacted tail is dead weight now: free it (the whole
+            # point — blocks return to the pool mid-generation) and
+            # re-promise the same count for the next growth window
+            freed = [int(self._table_h[slot, jb]) for jb in
+                     range(nb_keep, nb)]
+            self.pool.free_run(freed)
+            fs = set(freed)
+            self._slot_blocks[slot] = [
+                b for b in self._slot_blocks[slot] if b not in fs]
+            self._table_h[slot, nb_keep:nb] = 0
+            if self.reserve_appends:
+                ok = self.pool.reserve(len(freed))
+                assert ok  # the freed blocks are on the free list
+                self._slot_reserved[slot] += len(freed)
+            self._cursor_h[slot] = self.capacity
+            self._table_dev = _snapshot(self._table_h)
+            self.stats["decode_evict_sweeps"] += 1
+
+    def _on_retire(self, slot: int, req: Request) -> None:
+        if not (self.capture_admission and self.pool is not None):
+            return
+        fn = self._decode_fns.get("retire_gather")
+        if fn is None:
+            nb, bs = self._nb_max, self.pool.block_size
+            depth = self._paged_depth
+
+            def body(pos, mask, row, horizon):
+                def dense(leaf):  # (L, NB, bs, KV) -> (L, depth, KV)
+                    g = leaf[:, row[:nb]]
+                    L = g.shape[0]
+                    return g.reshape(L, nb * bs, -1)[:, :depth]
+
+                p = dense(pos)
+                # clip at the emitted-token horizon: decode chunks may
+                # overshoot a finishing request (surplus tokens are
+                # truncated at collect time) and whether those surplus
+                # rows fit the cache depends only on the margin, so they
+                # are not part of the request's kept set
+                return p, dense(mask) & (p < horizon)
+
+            fn = jax.jit(body)
+            self._decode_fns["retire_gather"] = fn
+        t = self.pool.tree()
+        horizon = len(req.prompt) + max(len(req.out_tokens) - 1, 0)
+        pos, mask = fn(t["pos"], t["mask"], _snapshot(self._table_h[slot]),
+                       jnp.asarray(horizon, jnp.int32))
+        req.retirement_cache = {"pos": np.asarray(pos),
+                                "mask": np.asarray(mask)}
 
     def _first_token(self, logits, seed: int, pos: int) -> int:
         """The admission token, sampled with the same fused-epilogue logic
@@ -1101,8 +1401,8 @@ class BucketedEngine(_SlotDecodeMixin):
         self.max_prefill_batch = max_prefill_batch or num_slots
         self.max_new_tokens = max_new_tokens
         self.eos_id = eos_id
-        self.decode_evict = decode_evict
-        self.decode_margin = (8 if decode_evict else max_new_tokens + 1)
+        self.decode_evict = DecodeEvictionConfig.coerce(decode_evict)
+        self.decode_margin = self.decode_evict.margin_rows(max_new_tokens)
         self._chunks = tuple(c for c in self._CHUNK_SIZES if c <= decode_chunk)
         # multi-pass policies draft with the compressed cache; their prefill
         # can't mask padding, so their groups use exact prompt lengths
@@ -1127,7 +1427,7 @@ class BucketedEngine(_SlotDecodeMixin):
                 draft_cfg=self.draft_cfg, extra_slots=self.decode_margin,
                 prompt_lens=lens if padded else None, seeds=seeds,
             )
-            if self.decode_evict:
+            if self.decode_evict.enabled:
                 res = res._replace(
                     cache=tf.add_decode_eviction_scores(res.cache))
             return res
@@ -1185,7 +1485,7 @@ class BucketedEngine(_SlotDecodeMixin):
         live = tf.init_decode_cache(self.cfg, self.num_slots,
                                     self.capacity + self.decode_margin,
                                     per_slot_cursor=True)
-        if self.decode_evict:
+        if self.decode_evict.enabled:
             live = tf.add_decode_eviction_scores(live)
         tok = jnp.zeros((self.num_slots, 1), jnp.int32)
         active = np.zeros(self.num_slots, bool)

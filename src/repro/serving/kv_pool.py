@@ -122,6 +122,9 @@ class KVBlockPool:
         self.reserved = 0
         self.high_water = 0  # peak blocks in use over the pool's lifetime
         self.pinned_blocks = 0  # blocks held by prefix-cache entries
+        # blocks returned mid-generation by decode-eviction sweeps (the
+        # engine's evict-and-compact step) — retirement frees not included
+        self.blocks_reclaimed_decode = 0
         self._write_fns: dict = {}  # jitted scatter programs, keyed by shape
 
     # -- geometry ---------------------------------------------------------
@@ -197,6 +200,17 @@ class KVBlockPool:
             self._refs[b] -= 1
             if self._refs[b] == 0:
                 self._free.append(int(b))
+
+    def free_run(self, ids) -> None:
+        """Return a *partial* block run of a **live** request — the tail
+        blocks a decode-eviction sweep compacted away mid-generation.
+        Semantically ``free`` (the request keeps its remaining blocks and
+        its slot), tracked separately as ``blocks_reclaimed_decode`` so
+        observability distinguishes eviction-driven reclaim from ordinary
+        retirement frees."""
+        ids = np.asarray(ids, np.int32)
+        self.free(ids)
+        self.blocks_reclaimed_decode += len(ids)
 
     def note_pinned(self, delta: int) -> None:
         """Prefix-cache accounting: blocks pinned by resident prompt-prefix
@@ -328,6 +342,7 @@ class KVBlockPool:
             "blocks_free": len(self._free),
             "blocks_reserved": self.reserved,
             "blocks_pinned_prefix": self.pinned_blocks,
+            "blocks_reclaimed_decode": self.blocks_reclaimed_decode,
             "high_water_blocks": self.high_water,
             "bytes_total": self.usable_blocks * self.block_bytes,
             "bytes_used": used * self.block_bytes,

@@ -97,6 +97,9 @@ class Request:
     admission_cache: Optional[dict] = None  # mask/pos of the admitted cache
     # (engine's ``capture_admission`` debug flag; the differential trace
     # harness compares kept sets through this)
+    retirement_cache: Optional[dict] = None  # mask/pos at retirement — the
+    # paged engine's final kept set under decode-time eviction (same
+    # ``capture_admission`` flag; None on the dense engines)
 
     @property
     def eviction_seed(self) -> int:

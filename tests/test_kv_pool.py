@@ -35,9 +35,11 @@ from repro.configs import get_smoke_config
 from repro.core import policies
 from repro.core.lookahead import init_lookahead_params
 from repro.kernels import ops, ref
-from repro.kernels.paged_attention import paged_decode_attention_pallas
+from repro.kernels.paged_attention import (paged_decode_attention_pallas,
+                                           paged_decode_masses_pallas)
 from repro.models import transformer as tf
-from repro.serving import KVBlockPool, PrefixCache
+from repro.serving import DecodeEvictionConfig, KVBlockPool, PrefixCache
+from repro.serving.engine import paged_sweep
 from trace_utils import kept_sets, make_trace_requests, run_trace
 
 ENGINE_POLICIES = [p for p in policies.SINGLE_PASS
@@ -433,3 +435,266 @@ def test_mirror_snapshots_are_frozen_copies(model):
     before = np.asarray(eng._table_dev).copy()
     eng._table_h[:] = 7  # the device snapshot must not alias the mirror
     assert np.array_equal(np.asarray(eng._table_dev), before)
+
+
+# ---------------------------------------------------------------------------
+# 7. decode-time streaming eviction on the paged pool
+# ---------------------------------------------------------------------------
+
+
+def test_paged_sweep_matches_numpy_topk():
+    """The jitted evict-and-compact sweep against a from-scratch numpy
+    reference: per (layer, kv head) keep the ``capacity`` highest-scoring
+    valid rows in temporal order, compact them into the head blocks,
+    zero the pad, carry kept score tallies, and touch *nothing* else —
+    not other slots' score lanes, not blocks outside the keep run."""
+    rng = np.random.default_rng(0)
+    L, KV, hd, bs = 2, 2, 8, 4
+    capacity, depth = 6, 16  # nb=4 blocks, nb_keep=2, pad rows 6..8 dead
+    nb, nb_keep = 4, 2
+    num_slots, N = 3, 12
+    k = rng.normal(size=(L, N, bs, KV, hd)).astype(np.float32)
+    v = rng.normal(size=(L, N, bs, KV, hd)).astype(np.float32)
+    pos = rng.integers(0, 500, size=(L, N, bs, KV)).astype(np.int32)
+    mask = rng.random((L, N, bs, KV)) < 0.8
+    mask[:, 0] = False  # the null block
+    score = rng.random((L, num_slots, depth, KV)).astype(np.float32)
+    slot = 1
+    table = np.zeros((num_slots, nb), np.int32)
+    table[slot] = rng.choice(np.arange(1, N), nb, replace=False)
+    newpool, newscore = paged_sweep(
+        {"k": jnp.asarray(k), "v": jnp.asarray(v),
+         "pos": jnp.asarray(pos), "mask": jnp.asarray(mask)},
+        jnp.asarray(score), jnp.asarray(table),
+        jnp.asarray(slot, jnp.int32), capacity=capacity, depth=depth,
+        block_size=bs, nb_keep=nb_keep)
+    newpool = {n: np.asarray(x) for n, x in newpool.items()}
+    newscore = np.asarray(newscore)
+
+    row = table[slot]
+    keep_ids = row[:nb_keep]
+
+    def dense(x, ids, rows):
+        g = x[:, ids]
+        return g.reshape((L, len(ids) * bs) + x.shape[3:])[:, :rows]
+
+    kd, vd = dense(k, row, depth), dense(v, row, depth)
+    pd, md = dense(pos, row, depth), dense(mask, row, depth)
+    kn = dense(newpool["k"], keep_ids, nb_keep * bs)
+    vn = dense(newpool["v"], keep_ids, nb_keep * bs)
+    pn = dense(newpool["pos"], keep_ids, nb_keep * bs)
+    mn = dense(newpool["mask"], keep_ids, nb_keep * bs)
+    for lyr in range(L):
+        for h in range(KV):
+            s = np.where(md[lyr, :, h], score[lyr, slot, :, h], -np.inf)
+            keep = np.sort(np.argsort(-s, kind="stable")[:capacity])
+            kept = md[lyr, keep, h]
+            assert np.array_equal(mn[lyr, :capacity, h], kept), (lyr, h)
+            assert not mn[lyr, capacity:, h].any(), "pad rows must be dead"
+            j = np.nonzero(kept)[0]
+            src = keep[kept]
+            assert np.array_equal(kn[lyr, j, h], kd[lyr, src, h])
+            assert np.array_equal(vn[lyr, j, h], vd[lyr, src, h])
+            assert np.array_equal(pn[lyr, j, h], pd[lyr, src, h])
+            dead = np.setdiff1d(np.arange(nb_keep * bs), j)
+            assert np.all(kn[lyr, dead, h] == 0.0), "evicted rows leak K"
+            want_sc = np.zeros(depth, np.float32)
+            want_sc[j] = score[lyr, slot, src, h]
+            assert np.array_equal(newscore[lyr, slot, :, h], want_sc)
+    others = [s for s in range(num_slots) if s != slot]
+    assert np.array_equal(newscore[:, others], score[:, others]), \
+        "sweep must not touch other slots' score lanes"
+    untouched = np.setdiff1d(np.arange(N), keep_ids)
+    for name, old in (("k", k), ("v", v), ("pos", pos), ("mask", mask)):
+        assert np.array_equal(newpool[name][:, untouched], old[:, untouched]), \
+            f"sweep rewrote {name} blocks outside the keep run"
+
+
+def _masses_case(rng):
+    case = _paged_case(rng)
+    case["window"] = int(rng.integers(3, 30)) if rng.random() < 0.5 else 0
+    return case
+
+
+@pytest.mark.parametrize("case", sweep_cases(17, 8, _masses_case))
+def test_paged_masses_kernel_matches_oracle(case):
+    """The two-phase Pallas masses kernel: ``out`` bitwise-identical to
+    the plain decode kernel (phase 0 is the unmodified flash recurrence),
+    masses match the dense-gather oracle, masked rows carry exact zeros —
+    over ragged tables, per-head masks, GQA shapes, and sliding windows."""
+    rng = np.random.default_rng(case["seed"])
+    B, KV, hd, bs = case["B"], case["KV"], case["hd"], case["bs"]
+    N, nb, H = case["N"], case["nb"], case["KV"] * case["G"]
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(N, bs, KV, hd)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(N, bs, KV, hd)), jnp.float32)
+    pm = jnp.asarray(rng.random((N, bs, KV)) > 0.3).at[0].set(False)
+    tbl = np.zeros((B, nb), np.int32)
+    for b in range(B):
+        n_live = int(rng.integers(0, min(nb, N - 1) + 1))
+        tbl[b, :n_live] = rng.choice(np.arange(1, N), n_live, replace=False)
+        rng.shuffle(tbl[b])
+    tbl = jnp.asarray(tbl)
+    kw = {}
+    if case["window"]:
+        kw = {"pos_pool": jnp.asarray(rng.integers(0, 50, (N, bs, KV)),
+                                      jnp.int32),
+              "new_pos": jnp.asarray(rng.integers(20, 70, (B,)), jnp.int32),
+              "window": case["window"]}
+    plain = paged_decode_attention_pallas(q, pk, pv, pm, tbl,
+                                          interpret=True, **kw)
+    got_out, got_m = paged_decode_masses_pallas(q, pk, pv, pm, tbl,
+                                                interpret=True, **kw)
+    assert np.array_equal(np.asarray(got_out), np.asarray(plain)), \
+        "score_masses must not perturb the attention output"
+    want_m = ref.paged_decode_masses(q, pk, pm, tbl, **kw)
+    np.testing.assert_allclose(got_m, want_m, atol=2e-5, rtol=2e-5)
+    # masked rows contribute exact zeros, alive heads sum to ~1
+    dead = ~np.repeat(np.moveaxis(np.asarray(
+        ref.gather_paged(pm, tbl)), 2, 1), H // KV, axis=1)
+    if case["window"]:
+        pos = np.asarray(ref.gather_paged(kw["pos_pool"], tbl))
+        oow = (np.asarray(kw["new_pos"])[:, None, None] - pos) >= \
+            case["window"]
+        dead |= np.repeat(np.moveaxis(oow, 2, 1), H // KV, axis=1)
+    got_m = np.asarray(got_m)
+    assert np.all(got_m[dead] == 0.0)
+    sums = got_m.sum(axis=-1)
+    alive = ~dead.all(axis=-1)
+    np.testing.assert_allclose(sums[alive], 1.0, atol=1e-4)
+    assert np.all(sums[~alive] == 0.0)
+
+
+def test_paged_masses_streaming_and_dispatch():
+    """The jnp streaming tier's second-pass masses and the public
+    ``ops.paged_decode_attention(score_masses=True)`` dispatch: same
+    oracle, ``out`` bitwise-unchanged, ``depth`` slices the mass width."""
+    rng = np.random.default_rng(3)
+    B, H, KV, hd, bs, N, nb = 2, 6, 2, 16, 4, 11, 5
+    depth = 18  # non-multiple of bs: the engine's capacity+interval shape
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(N, bs, KV, hd)), jnp.float32)
+    pv = jnp.asarray(rng.normal(size=(N, bs, KV, hd)), jnp.float32)
+    pm = np.asarray(rng.random((N, bs, KV)) > 0.2)
+    pm[0] = False
+    # one private block run per sequence, with the engine's depth
+    # invariant: rows past ``depth`` are masked False by construction
+    # (appends clamp at depth) — the kernel tier's depth slice assumes it
+    tbl = 1 + np.arange(B * nb, dtype=np.int32).reshape(B, nb)
+    pm[tbl[:, -1], depth - (nb - 1) * bs:] = False
+    pm, tbl = jnp.asarray(pm), jnp.asarray(tbl)
+    want_m = ref.paged_decode_masses(q, pk, pm, tbl)
+    out1 = ops._paged_decode_streaming(q, pk, pv, pm, tbl)
+    out2, m2 = ops._paged_decode_streaming(q, pk, pv, pm, tbl,
+                                           score_masses=True)
+    assert np.array_equal(np.asarray(out2), np.asarray(out1))
+    np.testing.assert_allclose(m2, want_m, atol=2e-5, rtol=2e-5)
+    # the public wrapper, on whichever tier the environment dispatches
+    out3 = ops.paged_decode_attention(q, pk, pv, pm, tbl, depth=depth)
+    out4, m4 = ops.paged_decode_attention(q, pk, pv, pm, tbl, depth=depth,
+                                          score_masses=True)
+    assert np.array_equal(np.asarray(out4), np.asarray(out3)), \
+        "score_masses must not change the dispatched output"
+    assert m4.shape == (B, H, depth)
+    # with ``depth`` the attention (and so the normalizer) runs over the
+    # first ``depth`` rows only — compare against the depth-sliced oracle,
+    # not a post-hoc slice of the full-width masses
+    want_d = ref.paged_decode_masses(q, pk, pm, tbl, depth=depth)
+    np.testing.assert_allclose(m4, want_d, atol=2e-5, rtol=2e-5)
+
+
+def _retire_kept(req):
+    """Kept (layer, head, position) sets at retirement, from the decode
+    cache snapshot ``_on_retire`` captures (already clipped at the
+    emitted-token horizon, so runs with different cache depths compare)."""
+    rc = req.retirement_cache
+    assert rc is not None, "capture_admission must stash retirement_cache"
+    return kept_sets({"mask": rc["mask"][:, None], "pos": rc["pos"][:, None]})
+
+
+def test_decode_evict_interval_inf_is_bitwise_noop(model):
+    """The API contract: decode eviction enabled with an interval no
+    generation reaches emits bitwise-identical tokens AND kept sets (at
+    retirement, per request) as the eviction-disabled paged path — the
+    score plumbing, the grown cache depth, and the sweep gate change
+    nothing until a sweep actually fires."""
+    cfg, params, lkv = model
+    chunk, max_new = 64, 24
+    reqs = make_trace_requests(cfg, chunk=chunk, seed=11, n_requests=3,
+                               max_new=max_new)
+    pool_a = _pool(cfg, block_size=4, num_blocks=256)
+    base, _ = run_trace(cfg, params, lkv, policy="lookaheadkv",
+                        requests=reqs, chunk=chunk, kv_pool=pool_a)
+    pool_b = _pool(cfg, block_size=4, num_blocks=256)
+    # chunk dispatch can overshoot a finishing request by up to the max
+    # decode chunk (16) rows, so "infinite" must cover max_new + 16
+    got, eng = run_trace(cfg, params, lkv, policy="lookaheadkv",
+                         requests=reqs, chunk=chunk, kv_pool=pool_b,
+                         decode_evict=DecodeEvictionConfig(
+                             enabled=True, interval=max_new + 16))
+    assert eng.stats["decode_evict_sweeps"] == 0, \
+        "interval > generation length must never sweep"
+    for uid, want in base.items():
+        assert got[uid].out_tokens == want.out_tokens, uid
+        assert _retire_kept(got[uid]) == _retire_kept(want), uid
+    for p in (pool_a, pool_b):
+        p.check()
+        assert p.used_blocks() == 0
+    assert pool_b.blocks_reclaimed_decode == 0
+
+
+def test_decode_evict_sweeps_reclaim_mid_generation(model):
+    """Active decode eviction: sweeps fire, whole blocks return to the
+    pool mid-generation, every request still completes at full length,
+    the per-slot footprint is bounded at capacity + interval rows, and
+    the pool drains conserved afterwards."""
+    cfg, params, lkv = model
+    chunk, max_new = 64, 24
+    reqs = make_trace_requests(cfg, chunk=chunk, seed=12, n_requests=4,
+                               max_new=max_new)
+    for r in reqs:
+        r.arrival_s = 0.0
+    pool = _pool(cfg, block_size=4, num_blocks=256)
+    got, eng = run_trace(cfg, params, lkv, policy="lookaheadkv",
+                         requests=reqs, chunk=chunk, kv_pool=pool,
+                         num_slots=2,
+                         decode_evict=DecodeEvictionConfig(enabled=True,
+                                                           interval=8))
+    assert eng._paged_depth == 8 + 8  # budget + interval bounds the slot
+    assert eng.stats["decode_evict_sweeps"] > 0
+    assert pool.blocks_reclaimed_decode > 0, \
+        "interval spanning whole blocks must free real blocks"
+    assert eng.stats["kv_pool"]["blocks_reclaimed_decode"] == \
+        pool.blocks_reclaimed_decode
+    for r in got.values():
+        assert len(r.out_tokens) == max_new  # eos_id=-1: full generations
+    pool.check()
+    assert pool.used_blocks() == 0 and pool.reserved == 0
+
+
+def test_decode_evict_contended_matches_isolated(model):
+    """Slot isolation under eviction: a request served in a contended
+    multi-slot engine emits the same tokens and retires with the same
+    kept sets as the same request served alone — sweeps fire at fixed
+    per-slot growth marks, so neighbours cannot perturb the cache."""
+    cfg, params, lkv = model
+    chunk, max_new = 64, 20
+    de = DecodeEvictionConfig(enabled=True, interval=8)
+    reqs = make_trace_requests(cfg, chunk=chunk, seed=13, n_requests=3,
+                               max_new=max_new)
+    for r in reqs:
+        r.arrival_s = 0.0
+    max_ctx = max(len(r.prompt) for r in reqs)
+    got, eng = run_trace(cfg, params, lkv, policy="lookaheadkv",
+                         requests=reqs, chunk=chunk, num_slots=2,
+                         max_context=max_ctx, decode_evict=de,
+                         kv_pool=_pool(cfg, block_size=4, num_blocks=256))
+    assert eng.stats["decode_evict_sweeps"] > 0
+    for r in reqs:
+        solo, _ = run_trace(cfg, params, lkv, policy="lookaheadkv",
+                            requests=[r], chunk=chunk, num_slots=1,
+                            max_context=max_ctx, decode_evict=de,
+                            kv_pool=_pool(cfg, block_size=4,
+                                          num_blocks=256))
+        assert got[r.uid].out_tokens == solo[r.uid].out_tokens, r.uid
+        assert _retire_kept(got[r.uid]) == _retire_kept(solo[r.uid]), r.uid

@@ -1,0 +1,147 @@
+"""The unified ``ServingConfig`` API and its deprecation shim.
+
+Three layers:
+
+1. **Schema**: defaults, ``DecodeEvictionConfig.coerce`` (bool / None /
+   instance), the shared ``margin_rows`` rule, and validation.
+2. **Round-trip**: ``from_legacy(**sc.legacy_kwargs()) == sc`` for a
+   fully non-default config; unknown kwargs raise ``TypeError`` exactly
+   like the old ``__init__`` signature would.
+3. **Shim equivalence**: ``ContinuousEngine(params, cfg, **old_kwargs)``
+   warns ``DeprecationWarning`` and serves bit-identically to the same
+   engine built from the equivalent ``ServingConfig`` (which must stay
+   silent); mixing both spellings fails loudly.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.config import EvictionConfig
+from repro.configs import get_smoke_config
+from repro.core.lookahead import init_lookahead_params
+from repro.models import transformer as tf
+from repro.serving import (ChunkingConfig, ContinuousEngine,
+                           DecodeEvictionConfig, Request, ServingConfig)
+
+
+# ---------------------------------------------------------------------------
+# 1. schema
+# ---------------------------------------------------------------------------
+
+
+def test_defaults_and_decode_evict_coercion():
+    sc = ServingConfig()
+    assert sc.decode_evict == DecodeEvictionConfig()
+    assert not sc.decode_evict.enabled
+    assert sc.chunking == ChunkingConfig()
+    assert sc.evict is not None  # None coerces to the default budget
+
+    assert DecodeEvictionConfig.coerce(True).enabled
+    assert not DecodeEvictionConfig.coerce(False).enabled
+    assert DecodeEvictionConfig.coerce(None) == DecodeEvictionConfig()
+    d = DecodeEvictionConfig(enabled=True, interval=32)
+    assert DecodeEvictionConfig.coerce(d) is d
+    with pytest.raises(AssertionError):
+        DecodeEvictionConfig.coerce(3)
+    # the legacy bool spelling rides ServingConfig too
+    assert ServingConfig(decode_evict=True).decode_evict.enabled
+    assert ServingConfig(evict=None).evict == EvictionConfig()
+
+
+def test_margin_rows_rule():
+    """The thrice-copied ``8 if decode_evict else max_new + 1`` rule all
+    three engines used to inline, now in one place."""
+    assert DecodeEvictionConfig().margin_rows(64) == 65
+    assert DecodeEvictionConfig(enabled=True).margin_rows(64) == 8
+    assert DecodeEvictionConfig(enabled=True, margin=4).margin_rows(64) == 4
+
+
+def test_validation():
+    with pytest.raises(AssertionError):
+        DecodeEvictionConfig(interval=0)
+    with pytest.raises(AssertionError):
+        DecodeEvictionConfig(margin=0)
+    with pytest.raises(AssertionError):
+        ChunkingConfig(chunk=0)
+
+
+# ---------------------------------------------------------------------------
+# 2. legacy round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_from_legacy_round_trip():
+    sc = ServingConfig(
+        policy="h2o", evict=EvictionConfig(budget=32),
+        decode_evict=DecodeEvictionConfig(enabled=True, interval=16),
+        chunking=ChunkingConfig(chunk=64, max_context=512, token_budget=96,
+                                decode_chunk=4),
+        num_slots=3, max_new_tokens=12, eos_id=7, reserve_appends=False,
+        capture_admission=True)
+    kw = sc.legacy_kwargs()
+    assert kw["chunk"] == 64 and kw["decode_chunk"] == 4
+    assert kw["decode_evict"].interval == 16
+    assert ServingConfig.from_legacy(**kw) == sc
+    assert sc.replace(num_slots=5).num_slots == 5
+    assert sc.num_slots == 3  # replace is non-destructive
+
+
+def test_from_legacy_rejects_unknown_kwargs():
+    with pytest.raises(TypeError, match="bogus_kwarg"):
+        ServingConfig.from_legacy(bogus_kwarg=1)
+
+
+# ---------------------------------------------------------------------------
+# 3. deprecation-shim equivalence on a live engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    lkv = init_lookahead_params(jax.random.PRNGKey(1), cfg, params["layers"])
+    return cfg, params, lkv
+
+
+def _requests(cfg, n=2, n_in=80, max_new=4):
+    rng = np.random.default_rng(0)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        n_in).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def test_legacy_kwargs_shim_serves_identically(model):
+    cfg, params, lkv = model
+    reqs = _requests(cfg)
+    kw = dict(policy="lookaheadkv", evict=EvictionConfig(budget=8),
+              num_slots=2, chunk=64, max_context=128, max_new_tokens=4,
+              eos_id=-1)
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        old = ContinuousEngine(params, cfg, lkv_params=lkv, **kw)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        new = ContinuousEngine(params, cfg, ServingConfig.from_legacy(**kw),
+                               lkv_params=lkv)
+    assert not any(issubclass(w.category, DeprecationWarning)
+                   for w in caught), "the supported spelling must not warn"
+    assert old.config == new.config
+    done_old = old.run([r.clone() for r in reqs])
+    done_new = new.run([r.clone() for r in reqs])
+    want = {r.uid: r.out_tokens for r in done_old}
+    for r in done_new:
+        assert r.out_tokens == want[r.uid]
+
+
+def test_mixing_config_and_kwargs_fails_loudly(model):
+    cfg, params, lkv = model
+    with pytest.raises(AssertionError):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ContinuousEngine(params, cfg, ServingConfig(), lkv_params=lkv,
+                             num_slots=2)

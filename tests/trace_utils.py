@@ -19,7 +19,8 @@ from typing import Optional
 
 from repro.common.config import EvictionConfig
 from repro.data.synthetic import make_prefix_trace
-from repro.serving import ContinuousEngine, PrefixCache, Request
+from repro.serving import (ContinuousEngine, PrefixCache, Request,
+                           ServingConfig)
 
 __all__ = ["make_trace_requests", "kept_sets", "run_trace",
            "assert_differential", "make_prefix_trace"]
@@ -62,13 +63,18 @@ def run_trace(cfg, params, lkv, *, policy, requests, chunk,
     rungs (the cache then only serves same-rung snapshots)."""
     max_new = max(r.max_new_tokens for r in requests)
     max_len = max(len(r.prompt) for r in requests)
-    eng = ContinuousEngine(
-        params, cfg, policy=policy, evict=EvictionConfig(budget=budget),
-        lkv_params=lkv if policy == "lookaheadkv" else None,
+    # ``engine_kw`` still uses the historical kwarg names; route them
+    # through the same mapping the deprecation shim uses, but hand the
+    # engine a ServingConfig (the supported API) — no warning emitted
+    sc = ServingConfig.from_legacy(
+        policy=policy, evict=EvictionConfig(budget=budget),
         num_slots=num_slots, chunk=chunk,
         max_context=engine_kw.pop("max_context", max_len),
         max_new_tokens=max_new, eos_id=-1, prefix_cache=prefix_cache,
         capture_admission=True, **engine_kw)
+    eng = ContinuousEngine(
+        params, cfg, sc,
+        lkv_params=lkv if policy == "lookaheadkv" else None)
     done = eng.run(_clone(requests))
     assert len(done) == len(requests)
     return {r.uid: r for r in done}, eng
