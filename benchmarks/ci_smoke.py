@@ -29,7 +29,13 @@ Gated verdicts:
 * ``sharded/scaling_verdict``  — on a forced 8-device host mesh the
   tensor-parallel paged engine's per-shard KV pool bytes scale exactly
   as total/model at model = {2, 4} and every width emits bit-identical
-  tokens to single-device serving.
+  tokens to single-device serving;
+* ``lookahead/quality_verdict`` — the full learning loop (trace harvest
+  -> gt_oracle distillation -> checkpoint -> serving load path): the
+  trained predictor beats the untrained one on per-(layer, head) oracle
+  kept-set overlap over held-out trace records, the distillation loss
+  decreases, and the trained checkpoint serves end-to-end through
+  ``ServingConfig.lkv_checkpoint``.
 
 The JSON artifact carries every reported benchmark row plus the verdict
 map, so a red gate links straight to the number that moved.
@@ -45,7 +51,7 @@ import time
 # every row name ending in ``_verdict`` gates the job
 SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving",
           "benchmarks.bench_prefix", "benchmarks.bench_paged",
-          "benchmarks.bench_sharded")
+          "benchmarks.bench_sharded", "benchmarks.bench_lookahead_quality")
 
 
 def main() -> None:

@@ -4,6 +4,13 @@ Pytrees are flattened to ``path -> array`` with '/'-joined dict keys; dtypes
 (including bfloat16, stored as uint16 views) and the tree structure round-trip
 exactly.  Sharded arrays are gathered to host before saving (process-0
 semantics on a real cluster; a no-op single-process here).
+
+On-disk layout: arrays are stored under opaque member names ``a0, a1, ...``
+and the path keys ride a ``__keys__`` JSON manifest (aligned by index), so
+path strings never collide with the ``__``-prefixed sentinels and keys
+containing ``__`` or ``/`` survive verbatim.  Files written by the old
+layout (path keys mangled with ``"/" -> "__"``) still load when their keys
+are unambiguous.
 """
 
 from __future__ import annotations
@@ -18,6 +25,9 @@ import numpy as np
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict:
+    """Path-keyed leaves, in ``jax.tree.flatten`` leaf order: dicts iterate
+    sorted (jax's dict registration), sequences numerically — so the dict's
+    insertion order *is* the treedef leaf order."""
     out = {}
     if isinstance(tree, dict):
         for k in sorted(tree):
@@ -33,15 +43,19 @@ def _flatten(tree: Any, prefix: str = "") -> dict:
 def save(path: str, tree: Any, *, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
-    arrays, dtypes = {}, {}
-    for k, v in flat.items():
+    arrays, dtypes, keys = {}, {}, []
+    for i, (k, v) in enumerate(flat.items()):
         a = np.asarray(jax.device_get(v))
         if a.dtype == jnp.bfloat16:
             dtypes[k] = "bfloat16"
             a = a.view(np.uint16)
         else:
             dtypes[k] = str(a.dtype)
-        arrays[k.replace("/", "__")] = a
+        arrays[f"a{i}"] = a
+        keys.append(k)
+    arrays["__keys__"] = np.frombuffer(
+        json.dumps(keys).encode(), dtype=np.uint8
+    )
     arrays["__dtypes__"] = np.frombuffer(
         json.dumps(dtypes).encode(), dtype=np.uint8
     )
@@ -52,32 +66,48 @@ def save(path: str, tree: Any, *, metadata: dict | None = None) -> None:
     np.savez(path, **arrays)
 
 
-def load(path: str, like: Any | None = None) -> Any:
-    """Restore.  With ``like`` given, unflatten into its structure (and
-    validate shapes); otherwise return the flat {path: array} dict."""
+def _load_flat(path: str) -> dict:
     z = np.load(path)
     dtypes = json.loads(bytes(z["__dtypes__"]).decode())
+    if "__keys__" in z.files:
+        keys = json.loads(bytes(z["__keys__"]).decode())
+        members = {k: f"a{i}" for i, k in enumerate(keys)}
+    else:
+        # legacy layout: path keys mangled "/" -> "__" (ambiguous for keys
+        # that genuinely contain "__"; such files predate the manifest)
+        members = {k.replace("__", "/"): k
+                   for k in z.files if not k.startswith("__")}
     flat = {}
-    for k in z.files:
-        if k.startswith("__"):
-            continue
-        path_key = k.replace("__", "/")
-        a = z[k]
+    for path_key, member in members.items():
+        a = z[member]
         if dtypes[path_key] == "bfloat16":
             a = a.view(jnp.bfloat16)
         flat[path_key] = jnp.asarray(a)
-    if like is None:
-        return flat
+    return flat
+
+
+def unflatten(flat: dict, like: Any) -> Any:
+    """Rebuild ``like``'s structure from a ``{path: array}`` dict, restoring
+    leaves in treedef order (``_flatten`` emits keys in exactly that order —
+    lexicographic sorting would scramble sequences of >= 10 entries, since
+    "10" < "2" as strings)."""
     ref = _flatten(like)
     assert set(ref) == set(flat), (
         f"checkpoint/tree mismatch: {set(ref) ^ set(flat)}"
     )
     for k in ref:
         assert ref[k].shape == flat[k].shape, (k, ref[k].shape, flat[k].shape)
-    leaves, treedef = jax.tree.flatten(like)
-    ordered = [flat[k] for k in sorted(ref)]
-    # tree.flatten of nested dicts is sorted-key order — same as _flatten
-    return jax.tree.unflatten(treedef, ordered)
+    _, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(treedef, [flat[k] for k in ref])
+
+
+def load(path: str, like: Any | None = None) -> Any:
+    """Restore.  With ``like`` given, unflatten into its structure (and
+    validate shapes); otherwise return the flat {path: array} dict."""
+    flat = _load_flat(path)
+    if like is None:
+        return flat
+    return unflatten(flat, like)
 
 
 def metadata(path: str) -> dict:

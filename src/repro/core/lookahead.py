@@ -75,6 +75,24 @@ def lookahead_count(lkv_params: dict) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(lkv_params))
 
 
+def load_lookahead_params(path: str, cfg: ModelConfig,
+                          layer_params: dict) -> dict:
+    """Load trained lookahead modules from a checkpoint.
+
+    Accepts both layouts ``launch/train.py`` writes: a bare lkv tree
+    (the final export) and the trainer-state layout
+    ``{"lkv": tree, "opt": AdamState}`` (a periodic ``--ckpt-every``
+    save), so serving can load either."""
+    from repro.checkpoint import io as ckpt
+
+    like = init_lookahead_params(jax.random.PRNGKey(0), cfg, layer_params)
+    flat = ckpt.load(path)
+    if any(k.startswith("lkv/") for k in flat):
+        flat = {k[len("lkv/"):]: v
+                for k, v in flat.items() if k.startswith("lkv/")}
+    return ckpt.unflatten(flat, like)
+
+
 def append_lookahead(
     h: jnp.ndarray,  # (B, S, D) embedded prompt
     lkv_params: dict,

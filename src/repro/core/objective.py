@@ -20,15 +20,21 @@ import jax.numpy as jnp
 
 from repro.common.config import ModelConfig
 from repro.core.scoring import normalize_l1
+from repro.kernels import ops
 from repro.models import transformer as tf
 
 
-def kl_divergence(p: jnp.ndarray, q: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
-    """KL(p ‖ q) along the last axis; p, q L1-normalized score vectors."""
+def kl_divergence(p: jnp.ndarray, q: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """KL(p ‖ q) along the last axis; p, q L1-normalized score vectors.
+
+    xlogy-style safe form: zero-mass ``p`` entries contribute exactly 0 and
+    *both* logs see the same clamp, so ``KL(p ‖ p) == 0`` identically.  (The
+    previous ``log(p + eps) - log(max(q, eps))`` asymmetry made the identity
+    nonzero — and the divergence slightly negative — near convergence,
+    biasing the distillation loss exactly where it matters.)"""
     p = jnp.maximum(p, 0.0)
-    q = jnp.maximum(q, eps)
-    return jnp.sum(jnp.where(p > 0, p * (jnp.log(p + eps) - jnp.log(q)), 0.0),
-                   axis=-1)
+    log_ratio = jnp.log(jnp.maximum(p, eps)) - jnp.log(jnp.maximum(q, eps))
+    return jnp.sum(jnp.where(p > 0, p * log_ratio, 0.0), axis=-1)
 
 
 def gt_scores(
@@ -41,11 +47,12 @@ def gt_scores(
     mrope_positions: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Ground-truth per-head scores (L, B, H, n_in), f32, stop-gradient."""
-    res = tf.prefill(
-        params, cfg, xy_tokens, capture_scores=True, gt_boundary=n_in,
-        want_logits="none", encoder_embeds=encoder_embeds,
-        mrope_positions=mrope_positions,
-    )
+    with ops.reference_mode():
+        res = tf.prefill(
+            params, cfg, xy_tokens, capture_scores=True, gt_boundary=n_in,
+            want_logits="none", encoder_embeds=encoder_embeds,
+            mrope_positions=mrope_positions,
+        )
     return jax.lax.stop_gradient(res.scores)
 
 
@@ -59,12 +66,16 @@ def lookahead_scores(
     mrope_positions: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Lookahead-estimated per-head scores (L, B, H, n_in), differentiable
-    w.r.t. ``lkv_params``."""
-    res = tf.prefill(
-        params, cfg, x_tokens, lkv_params=lkv_params, capture_scores=True,
-        want_logits="none", encoder_embeds=encoder_embeds,
-        mrope_positions=mrope_positions,
-    )
+    w.r.t. ``lkv_params``.
+
+    Traced under ``ops.reference_mode()``: the Pallas kernels are
+    forward-only, and this is the pass gradients flow through."""
+    with ops.reference_mode():
+        res = tf.prefill(
+            params, cfg, x_tokens, lkv_params=lkv_params, capture_scores=True,
+            want_logits="none", encoder_embeds=encoder_embeds,
+            mrope_positions=mrope_positions,
+        )
     return res.scores
 
 
@@ -91,6 +102,27 @@ def lkv_loss(
     return loss, LossReport(loss=loss, kl_per_layer=kl.mean(axis=(1, 2)))
 
 
+def lkv_loss_from_targets(
+    params: dict,
+    cfg: ModelConfig,
+    lkv_params: dict,
+    x_tokens: jnp.ndarray,  # (B, n_in)
+    s_gt: jnp.ndarray,  # (L, B, H, n_in) harvested gt_oracle scores
+    **kw,
+) -> tuple[jnp.ndarray, LossReport]:
+    """Distillation against *precomputed* gt targets (harvested from serving
+    traces, ``repro.data.harvest``): identical to ``lkv_loss`` with the GT
+    pass replaced by stored score vectors — each step runs only the lookahead
+    pass, so training is cheaper than online distillation and the expensive
+    [X; Y] oracle pass is paid once at harvest time."""
+    s_lkv = lookahead_scores(params, cfg, lkv_params, x_tokens, **kw)
+    p = normalize_l1(jax.lax.stop_gradient(s_gt))
+    q = normalize_l1(s_lkv)
+    kl = kl_divergence(p, q)  # (L, B, H)
+    loss = kl.mean()
+    return loss, LossReport(loss=loss, kl_per_layer=kl.mean(axis=(1, 2)))
+
+
 def lm_loss(
     params: dict,
     cfg: ModelConfig,
@@ -100,8 +132,9 @@ def lm_loss(
 ) -> jnp.ndarray:
     """Plain next-token cross-entropy (pretraining loss for the SSM arch and
     the tiny end-to-end example)."""
-    res = tf.prefill(params, cfg, tokens[:, :-1], want_logits="all",
-                     encoder_embeds=encoder_embeds)
+    with ops.reference_mode():
+        res = tf.prefill(params, cfg, tokens[:, :-1], want_logits="all",
+                         encoder_embeds=encoder_embeds)
     logits = res.logits  # (B, S-1, V) f32
     targets = tokens[:, 1:]
     logp = jax.nn.log_softmax(logits, axis=-1)

@@ -9,12 +9,17 @@ Dispatch policy
   fallbacks implement the same streaming algorithms as the kernels (online
   softmax, chunked SSD) so the CPU dry-run lowers with bounded temporaries —
   which is what the roofline reads.
+* ``reference_mode()`` overrides both: the Pallas kernels are forward-only
+  (no custom VJP), so any code that must trace under ``jax.grad`` — the
+  distillation objective — wraps its forward pass in this context and gets
+  the differentiable jnp path regardless of backend or env.
 
 Every wrapper has a matching naive oracle in ``ref.py``.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -27,8 +32,33 @@ from repro.kernels.ref import NEG_INF, _expand_gqa
 # full score block is small enough that chunking only adds overhead.
 _DIRECT_SEQ = 2048
 
+# Trace-time override: when truthy, use_pallas() is False no matter what.
+# Only mutated by reference_mode(); read at trace time, so a jitted function
+# traced inside the context bakes in the jnp path.
+_REFERENCE_ONLY = False
+
+
+@contextlib.contextmanager
+def reference_mode():
+    """Force the differentiable jnp dispatch path while tracing.
+
+    The Pallas kernels have no custom VJP — differentiating through
+    ``pallas_call`` raises.  Training code (``core/objective``) traces its
+    forward pass inside this context so gradients flow through the jnp
+    implementations on every backend, including TPU and REPRO_FORCE_PALLAS=1.
+    """
+    global _REFERENCE_ONLY
+    prev = _REFERENCE_ONLY
+    _REFERENCE_ONLY = True
+    try:
+        yield
+    finally:
+        _REFERENCE_ONLY = prev
+
 
 def use_pallas() -> bool:
+    if _REFERENCE_ONLY:
+        return False
     if os.environ.get("REPRO_FORCE_PALLAS") == "1":
         return True
     return jax.default_backend() == "tpu"

@@ -16,11 +16,11 @@ import warnings
 import jax
 import numpy as np
 
-from repro.checkpoint import io as ckpt
 from repro.common.config import EvictionConfig
 from repro.configs import get_config, get_smoke_config
 from repro.core import policies
-from repro.core.lookahead import init_lookahead_params
+from repro.core.lookahead import (init_lookahead_params,
+                                  load_lookahead_params)
 from repro.models import transformer as tf
 from repro.serving import (BucketedEngine, ChunkingConfig, ContinuousEngine,
                            DecodeEvictionConfig, KVBlockPool, PrefixCache,
@@ -82,7 +82,7 @@ def main():
         lkv = init_lookahead_params(jax.random.PRNGKey(args.seed + 1), cfg,
                                     params["layers"])
         if args.lkv_ckpt:
-            lkv = ckpt.load(args.lkv_ckpt, like=lkv)
+            lkv = load_lookahead_params(args.lkv_ckpt, cfg, params["layers"])
             print(f"loaded lookahead modules from {args.lkv_ckpt}")
 
     rng = np.random.default_rng(args.seed)

@@ -103,6 +103,27 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig):
     return lkv_step
 
 
+def make_distill_step(cfg: ModelConfig, tc: TrainConfig):
+    """(params, lkv, opt_state, batch) -> (lkv', opt_state', loss) against
+    *harvested* gt targets: ``batch = {"x": (B, n), "s_gt": (L, B, H, n)}``
+    (``data/harvest.py``).  Each step runs only the lookahead pass — the
+    oracle pass was paid once at harvest time."""
+    assert cfg.technique_applies, \
+        "distillation trains lookahead modules; the SSM arch has none"
+
+    def distill_step(params, lkv, opt_state, batch):
+        def loss_fn(lkv):
+            loss, _ = objective.lkv_loss_from_targets(
+                params, cfg, lkv, batch["x"], batch["s_gt"])
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(lkv)
+        lkv, opt_state, metrics = adam.update(lkv, grads, opt_state, tc)
+        return lkv, opt_state, loss
+
+    return distill_step
+
+
 def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                       budget: int = PREFILL_BUDGET):
     evict = EvictionConfig(policy="lookaheadkv", budget=min(budget, shape.seq_len // 4))

@@ -138,6 +138,14 @@ class ServingConfig:
     reserve_appends: bool = True  # guarantee admitted requests' growth
     capture_admission: bool = False  # stash mask/pos on each Request
     mesh: Any = None  # ("data", "model") mesh: tensor-parallel serving
+    # trained lookahead modules (npz from launch/train.py): loaded at
+    # engine init when ``lkv_params`` is not passed directly — the serving
+    # half of the harvest -> distill -> serve loop
+    lkv_checkpoint: Optional[str] = None
+    # gt_oracle capture hook (data.harvest.HarvestWriter | None): called
+    # as ``hook.on_retire(request)`` when a request retires, while its
+    # generated continuation — the "future" the oracle needs — is in hand
+    harvest: Any = None
 
     def __post_init__(self):
         self.decode_evict = DecodeEvictionConfig.coerce(self.decode_evict)

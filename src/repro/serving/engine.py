@@ -348,6 +348,13 @@ class _SlotDecodeMixin:
                 sched.retire(r, now=now)
                 active[slot] = False
                 self._on_retire(slot, r)
+                # gt_oracle harvest: the retired request carries the very
+                # future the oracle policy needs (its generated tokens), so
+                # this is the one moment importance targets can be captured
+                # from live traffic (deprecated engines lack the hook)
+                h = getattr(self, "harvest", None)
+                if h is not None:
+                    h.on_retire(r)
                 self._release_slot(slot)
 
     def _on_retire(self, slot: int, req: Request) -> None:
@@ -439,7 +446,17 @@ class ContinuousEngine(_SlotDecodeMixin):
         self.params, self.cfg = params, cfg
         self.policy = policy
         self.evict = config.evict
+        if config.lkv_checkpoint:
+            assert lkv_params is None, \
+                "pass trained modules either as lkv_params or as " \
+                "config.lkv_checkpoint, not both"
+            from repro.core.lookahead import load_lookahead_params
+            lkv_params = load_lookahead_params(
+                config.lkv_checkpoint, cfg, params["layers"])
         self.lkv_params = lkv_params
+        # gt_oracle capture hook (the harvest half of the learning loop):
+        # called per retired request in ``_collect``
+        self.harvest = config.harvest
         # tensor-parallel serving: commit the params to their param_specs
         # shardings (Megatron GQA rules — q/o on heads, k/v on kv heads
         # over "model") so every jitted program below lowers sharded, and

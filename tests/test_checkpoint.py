@@ -1,0 +1,123 @@
+"""Checkpoint round-trip regression suite (checkpoint/io.py).
+
+Two historical corruption bugs are pinned here:
+
+1. **Leaf ordering** — ``load(path, like)`` used to rebuild the tree from
+   lexicographically sorted path keys, but ``jax.tree.flatten`` orders
+   sequence children numerically, so any list of >= 10 entries (every
+   per-layer list on a real arch) silently unflattened arrays into the
+   wrong leaves ("10" < "2" as strings).
+2. **Lossy key encoding** — path keys were mangled ``"/" -> "__"`` into npz
+   member names, so a pytree key containing ``__`` corrupted its path on
+   load and could collide with the ``__dtypes__``/``__meta__`` sentinels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+from repro.optim import adam
+
+
+def _assert_tree_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_twelve_element_list_roundtrips_bit_exact(tmp_path):
+    """A 12-entry list (one leaf per entry, each a distinct value) must come
+    back with every array on its own leaf — the lexicographic restore put
+    entry 10 where entry 2 belonged."""
+    tree = {"layers": [jnp.full((3, 2), i, jnp.float32) + i / 7.0
+                       for i in range(12)]}
+    p = str(tmp_path / "layers.npz")
+    ckpt.save(p, tree)
+    back = ckpt.load(p, like=jax.tree.map(jnp.zeros_like, tree))
+    _assert_tree_equal(tree, back)
+    for i, leaf in enumerate(back["layers"]):
+        assert float(leaf[0, 0]) == pytest.approx(i + i / 7.0)
+
+
+def test_mixed_depth_sequences_roundtrip(tmp_path):
+    """Nested dicts + an 11-tuple + per-entry dicts: the worst case for any
+    restore order that is not the treedef order."""
+    rng = np.random.default_rng(0)
+    tree = {
+        "blocks": tuple({"w": jnp.asarray(rng.normal(size=(2, 2)),
+                                          jnp.float32),
+                         "b": jnp.asarray(rng.normal(size=(2,)),
+                                          jnp.float32)}
+                        for _ in range(11)),
+        "head": jnp.asarray(rng.normal(size=(4,)), jnp.float32),
+    }
+    p = str(tmp_path / "mixed.npz")
+    ckpt.save(p, tree)
+    back = ckpt.load(p, like=jax.tree.map(jnp.zeros_like, tree))
+    _assert_tree_equal(tree, back)
+
+
+def test_dunder_keys_survive(tmp_path):
+    """Keys containing ``__`` (and nesting around them) must round-trip
+    verbatim — the old ``"/" <-> "__"`` mangle corrupted them and collided
+    with the ``__``-prefixed sentinels."""
+    tree = {
+        "w__a": jnp.arange(4, dtype=jnp.float32),
+        "__meta__": jnp.ones((2,), jnp.float32),  # sentinel-shaped key
+        "nested": {"x__y__z": jnp.full((3,), 7.0, jnp.float32)},
+    }
+    p = str(tmp_path / "dunder.npz")
+    ckpt.save(p, tree, metadata={"tag": "t"})
+    flat = ckpt.load(p)
+    assert set(flat) == {"w__a", "__meta__", "nested/x__y__z"}
+    back = ckpt.load(p, like=jax.tree.map(jnp.zeros_like, tree))
+    _assert_tree_equal(tree, back)
+    assert ckpt.metadata(p) == {"tag": "t"}
+
+
+def test_bf16_and_metadata_roundtrip(tmp_path):
+    tree = {"w": jnp.asarray([[1.5, -2.25]], jnp.bfloat16),
+            "s": jnp.asarray(3, jnp.int32)}
+    p = str(tmp_path / "bf16.npz")
+    ckpt.save(p, tree, metadata={"arch": "smoke", "step": 5})
+    back = ckpt.load(p, like=jax.tree.map(jnp.zeros_like, tree))
+    assert back["w"].dtype == jnp.bfloat16
+    _assert_tree_equal(tree, back)
+    assert ckpt.metadata(p) == {"arch": "smoke", "step": 5}
+
+
+def test_adam_state_roundtrips(tmp_path):
+    """Trainer-state checkpoints persist ``{"lkv": tree, "opt": AdamState}``
+    — the NamedTuple's field order must survive, including a >= 10-entry
+    per-layer list inside mu/nu."""
+    params = {"layers": [jnp.full((2,), i, jnp.float32) for i in range(10)],
+              "emb": jnp.ones((3,), jnp.float32)}
+    state = adam.init(params)
+    state = state._replace(
+        step=jnp.asarray(17, jnp.int32),
+        mu=jax.tree.map(lambda x: x + 0.5, state.mu),
+        nu=jax.tree.map(lambda x: x + 2.0, state.nu))
+    tree = {"lkv": params, "opt": state}
+    p = str(tmp_path / "train_state.npz")
+    ckpt.save(p, tree)
+    like = {"lkv": jax.tree.map(jnp.zeros_like, params),
+            "opt": adam.init(params)}
+    back = ckpt.load(p, like=like)
+    assert isinstance(back["opt"], adam.AdamState)
+    assert int(back["opt"].step) == 17
+    _assert_tree_equal(tree, back)
+
+
+def test_mismatched_tree_raises(tmp_path):
+    tree = {"a": jnp.ones((2,), jnp.float32)}
+    p = str(tmp_path / "m.npz")
+    ckpt.save(p, tree)
+    with pytest.raises(AssertionError):
+        ckpt.load(p, like={"b": jnp.ones((2,), jnp.float32)})
+    with pytest.raises(AssertionError):
+        ckpt.load(p, like={"a": jnp.ones((3,), jnp.float32)})

@@ -1,0 +1,212 @@
+"""The learning loop end-to-end: trace harvest -> distillation -> trainer
+checkpoint/resume -> serving load path.
+
+* Harvested records carry exactly the frozen-model gt_oracle scores of the
+  served prompt under its *generated* continuation (the future the oracle
+  policy needs, captured at retirement).
+* ``launch/train.py --harvest`` distills against those targets; a killed
+  run (periodic ``--ckpt-every`` save, no final save) resumed with
+  ``--resume`` finishes bit-identical to an uninterrupted run.
+* ``ServingConfig.lkv_checkpoint`` loads the trained modules into
+  ``ContinuousEngine`` and serves the lookaheadkv policy end-to-end,
+  bit-identical to passing the same tree as ``lkv_params``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+from repro.common.config import EvictionConfig
+from repro.configs import get_smoke_config
+from repro.core import objective
+from repro.core.lookahead import (init_lookahead_params,
+                                  load_lookahead_params, lookahead_count)
+from repro.data import harvest
+from repro.launch import train as train_mod
+from repro.models import transformer as tf
+from repro.serving import (ChunkingConfig, ContinuousEngine, Request,
+                           ServingConfig)
+
+CHUNK = 16
+MAX_NEW = 4
+N_REQUESTS = 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def harvest_dir(model, tmp_path_factory):
+    cfg, params = model
+    out = str(tmp_path_factory.mktemp("harvest"))
+    w = harvest.harvest_trace(params, cfg, out_dir=out, requests=N_REQUESTS,
+                              policy="h2o", budget=32, chunk=CHUNK,
+                              max_new=MAX_NEW, max_obs=MAX_NEW, num_slots=2,
+                              seed=3)
+    assert w.records_written == N_REQUESTS
+    return out
+
+
+def _train_argv(harvest_dir, ckpt_path, steps):
+    return ["--arch", "smollm-135m", "--smoke", "--harvest", harvest_dir,
+            "--steps", str(steps), "--batch", "2", "--seed", "1",
+            "--ckpt", ckpt_path]
+
+
+@pytest.fixture(scope="module")
+def trained_ckpt(harvest_dir, tmp_path_factory):
+    p = str(tmp_path_factory.mktemp("ckpt") / "lkv.npz")
+    train_mod.main(_train_argv(harvest_dir, p, steps=3))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# harvest capture
+# ---------------------------------------------------------------------------
+
+
+def test_records_carry_gt_oracle_scores(model, harvest_dir):
+    """Every stored score tensor equals the frozen-model oracle pass over
+    [prompt; generated]: (L, H, n_in), rows scored by the *served* future."""
+    cfg, params = model
+    records = harvest.load_records(harvest_dir)
+    assert len(records) == N_REQUESTS
+    L = cfg.num_layers
+    H = cfg.attn.num_heads
+    for r in records:
+        assert r["s"].shape == (L, H, len(r["x"]))
+        assert 1 <= len(r["y"]) <= MAX_NEW
+    r = records[0]
+    import jax.numpy as jnp
+    xy = jnp.asarray(np.concatenate([r["x"], r["y"]]))[None]
+    s = np.asarray(objective.gt_scores(params, cfg, xy, len(r["x"]))[:, 0])
+    np.testing.assert_allclose(r["s"], s, rtol=1e-5, atol=1e-7)
+
+
+def test_iterator_is_deterministic(harvest_dir):
+    a = harvest.HarvestIterator(harvest_dir, 2, seed=7)
+    b = harvest.HarvestIterator(harvest_dir, 2, seed=7)
+    for _ in range(4):
+        ba, bb = next(a), next(b)
+        assert ba["x"].shape[0] == 2
+        assert ba["s_gt"].shape[1] == 2
+        assert ba["s_gt"].shape[3] == ba["x"].shape[1]
+        np.testing.assert_array_equal(ba["x"], bb["x"])
+        np.testing.assert_array_equal(ba["s_gt"], bb["s_gt"])
+
+
+def test_writer_appends_after_existing_shards(model, harvest_dir):
+    """A second harvest into the same directory extends the dataset instead
+    of clobbering shard_00000."""
+    before = len(harvest.load_records(harvest_dir))
+    cfg, params = model
+    w = harvest.HarvestWriter(
+        params, cfg, harvest.HarvestConfig(out_dir=harvest_dir, max_obs=4))
+    rec = harvest.load_records(harvest_dir)[0]
+
+    class _Req:
+        prompt = rec["x"]
+        out_tokens = [int(t) for t in rec["y"]]
+
+    w.on_retire(_Req())
+    w.flush()
+    assert len(harvest.load_records(harvest_dir)) == before + 1
+
+
+# ---------------------------------------------------------------------------
+# distillation trainer: kill-and-resume
+# ---------------------------------------------------------------------------
+
+
+def test_kill_and_resume_is_bit_exact(harvest_dir, tmp_path):
+    a = str(tmp_path / "straight.npz")
+    b = str(tmp_path / "killed.npz")
+    # uninterrupted 4-step run (--verify also gates loss decrease +
+    # round-trip on the way)
+    train_mod.main(_train_argv(harvest_dir, a, steps=4) + ["--verify"])
+    # same run killed after step 2 (periodic save, no final save) ...
+    train_mod.main(_train_argv(harvest_dir, b, steps=4)
+                   + ["--ckpt-every", "2", "--stop-after", "2"])
+    assert ckpt.metadata(b)["step"] == 2
+    # ... then resumed: optimizer moments, step count and the data stream
+    # all continue, so the final state matches bit-for-bit
+    train_mod.main(_train_argv(harvest_dir, b, steps=4) + ["--resume"])
+    fa, fb = ckpt.load(a), ckpt.load(b)
+    assert set(fa) == set(fb)
+    for k in fa:
+        np.testing.assert_array_equal(np.asarray(fa[k]), np.asarray(fb[k]),
+                                      err_msg=k)
+    assert ckpt.metadata(b)["step"] == 4
+    assert ckpt.metadata(b)["source"] == harvest_dir
+
+
+# ---------------------------------------------------------------------------
+# serving load path
+# ---------------------------------------------------------------------------
+
+
+def _serving_config(**over):
+    base = dict(
+        policy="lookaheadkv",
+        evict=EvictionConfig(budget=24, draft_len=8),
+        chunking=ChunkingConfig(chunk=CHUNK, max_context=64),
+        num_slots=2, max_new_tokens=MAX_NEW, eos_id=-1)
+    base.update(over)
+    return ServingConfig(**base)
+
+
+def _requests(cfg, seed=5):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, n in enumerate((40, 56, 24))]
+
+
+def test_lkv_checkpoint_serves_end_to_end(model, trained_ckpt):
+    cfg, params = model
+    lkv = load_lookahead_params(trained_ckpt, cfg, params["layers"])
+    assert lookahead_count(lkv) > 0
+    # the engine loads the trained tree itself ...
+    e1 = ContinuousEngine(params, cfg,
+                          _serving_config(lkv_checkpoint=trained_ckpt))
+    done1 = e1.run(_requests(cfg))
+    # ... and serves bit-identically to the same tree passed directly
+    e2 = ContinuousEngine(params, cfg, _serving_config(), lkv_params=lkv)
+    done2 = e2.run(_requests(cfg))
+    by_uid = {r.uid: r for r in done2}
+    for r in done1:
+        assert len(r.out_tokens) == MAX_NEW
+        assert r.out_tokens == by_uid[r.uid].out_tokens, r.uid
+    # the trained tree is not the random init
+    init = init_lookahead_params(jax.random.PRNGKey(1), cfg,
+                                 params["layers"])
+    diffs = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(lkv), jax.tree.leaves(init))]
+    assert any(diffs)
+
+
+def test_lkv_checkpoint_and_params_conflict(model, trained_ckpt):
+    cfg, params = model
+    lkv = load_lookahead_params(trained_ckpt, cfg, params["layers"])
+    with pytest.raises(AssertionError):
+        ContinuousEngine(params, cfg,
+                         _serving_config(lkv_checkpoint=trained_ckpt),
+                         lkv_params=lkv)
+
+
+def test_load_lookahead_params_both_layouts(model, trained_ckpt, tmp_path):
+    """Bare lkv trees (the old export) and trainer-state layouts load to
+    the same tree."""
+    cfg, params = model
+    lkv = load_lookahead_params(trained_ckpt, cfg, params["layers"])
+    bare = str(tmp_path / "bare.npz")
+    ckpt.save(bare, jax.device_get(lkv))
+    lkv2 = load_lookahead_params(bare, cfg, params["layers"])
+    for a, b in zip(jax.tree.leaves(lkv), jax.tree.leaves(lkv2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
