@@ -91,13 +91,11 @@ def _eval_batches(records, min_len: int, max_len: int = 10**9,
     return batches
 
 
-def _head_kept_sets(scores, budget):
-    """Per-(layer, head) top-``budget`` kept set of a raw score tensor
-    (L, H, n) — the predictor's selection before GQA pooling, the quantity
-    the distillation objective actually trains."""
-    return {(l, h): set(np.argsort(-scores[l, h])[:budget].tolist())
-            for l in range(scores.shape[0])
-            for h in range(scores.shape[1])}
+# Per-(layer, head) top-``budget`` kept set of a raw score tensor (L, H, n)
+# — the predictor's selection before GQA pooling, the quantity the
+# distillation objective actually trains.  Shared with the serving drift
+# monitor so the online gauge and this offline bench agree by construction.
+from repro.obs.quality import head_kept_sets as _head_kept_sets  # noqa: E402
 
 
 def _predicted_scores(params, cfg, trees, records):

@@ -42,8 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (decode_step_stats, make_poisson_trace,
-                               ttft_stats)
+from benchmarks.common import (decode_step_stats, engine_stats,
+                               make_poisson_trace, ttft_stats)
 from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.core.lookahead import init_lookahead_params
@@ -107,10 +107,11 @@ def bench(seed: int = 0, trials: int = 3):
     for _ in range(trials):
         for name, eng in engines.items():
             done = eng.run(make_trace(seed, cfg.vocab_size))
+            es = engine_stats(eng)
             m = {
-                "max_concurrency": eng.stats["max_concurrency"],
+                "max_concurrency": es["max_concurrency"],
                 "kv_bytes": eng.kv_device_bytes(),
-                "preemptions": eng.stats.get("preemptions", 0),
+                "preemptions": es.get("preemptions", 0),
             }
             m.update(ttft_stats(done))
             m.update(decode_step_stats(eng))
@@ -123,7 +124,7 @@ def bench(seed: int = 0, trials: int = 3):
             else:
                 best["max_concurrency"] = max(best["max_concurrency"],
                                               m["max_concurrency"])
-    out["paged"]["kv_pool"] = engines["paged"].stats["kv_pool"]
+    out["paged"]["kv_pool"] = engine_stats(engines["paged"])["kv_pool"]
     return out
 
 

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import clone_requests, ttft_stats
+from benchmarks.common import clone_requests, engine_stats, ttft_stats
 from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.data.synthetic import make_prefix_trace
@@ -101,11 +101,12 @@ def bench(n_requests=14, seed=0):
     eng_on.run(_clone(reqs))
     res = {"off": _ttft(eng_off.run(_clone(reqs)))}
     done_on = eng_on.run(_clone(reqs))
+    es = engine_stats(eng_on)
     res["on"] = _ttft(done_on)
     res["on"].update(
-        hit_rate=eng_on.stats["prefix"]["hit_rate"],
-        cached_token_frac=eng_on.stats["prefix"]["cached_token_frac"],
-        tokens_skipped=eng_on.stats["prefix_tokens_skipped"],
+        hit_rate=es["prefix"]["hit_rate"],
+        cached_token_frac=es["prefix"]["cached_token_frac"],
+        tokens_skipped=es["prefix_tokens_skipped"],
         cache_bytes=cache.stats()["bytes"],
         entries=cache.stats()["entries"],
     )

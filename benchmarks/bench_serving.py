@@ -46,7 +46,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import (clone_requests, decode_step_stats,
-                               make_poisson_trace, ttft_stats)
+                               engine_stats, make_poisson_trace, ttft_stats)
 from repro.common.config import EvictionConfig
 from repro.configs import get_smoke_config
 from repro.core.lookahead import init_lookahead_params
@@ -157,11 +157,12 @@ def run_chunked(eng, reqs):
     m["compiles"] = (eng.chunk_cache.compile_count()
                      + len(eng._decode_fns))
     m["compile_cache"] = eng.chunk_cache.stats()
-    m["engine_stats"] = dict(eng.stats)
+    s = engine_stats(eng)
+    m["engine_stats"] = s
     m["kv_bytes_peak"] = eng.kv_device_bytes()
     # the serving mesh (None = single-device): BENCH_*.json rows must say
     # which device topology produced their numbers
-    m["mesh"] = eng.stats.get("mesh")
+    m["mesh"] = s.get("mesh")
     m.update(decode_step_stats(eng))
     return m
 
@@ -247,17 +248,18 @@ def bench_decode_evict(n_requests=8, policy="lookaheadkv", seed=0, *,
         t0 = time.perf_counter()
         done = eng.run(_clone(trace))
         wall = time.perf_counter() - t0
-        s = eng.stats["kv_pool"]
+        es = engine_stats(eng)
+        s = es["kv_pool"]
         out[name] = {
             "wall_s": wall,
             "tok_per_s": sum(len(r.out_tokens) for r in done) / wall,
             "full_length": all(len(r.out_tokens) == max_new for r in done),
-            "max_concurrency": eng.stats["max_concurrency"],
+            "max_concurrency": es["max_concurrency"],
             "pool_bytes": s["bytes_total"],
             "high_water_blocks": s["high_water_blocks"],
-            "sweeps": eng.stats.get("decode_evict_sweeps", 0),
+            "sweeps": es.get("decode_evict_sweeps", 0),
             "blocks_reclaimed": s["blocks_reclaimed_decode"],
-            "preemptions": eng.stats["preemptions"],
+            "preemptions": es["preemptions"],
         }
     return out
 

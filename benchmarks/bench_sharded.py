@@ -91,17 +91,19 @@ def _child_bench() -> dict:
             max_new=MAX_NEW, gap_s=1e-6)
         eng.run([r.clone() for r in trace])  # compile off the clock
         done = eng.run([r.clone() for r in trace])
+        from benchmarks.common import engine_stats
+        es = engine_stats(eng)
         toks = sum(len(r.out_tokens) for r in done)
-        steps = max(eng.stats.get("decode_steps", 0), 1)
-        decode_s = max(eng.stats.get("decode_time_s", 0.0), 1e-9)
-        s = eng.stats["kv_pool"]
+        steps = max(es.get("decode_steps", 0), 1)
+        decode_s = max(es.get("decode_time_s", 0.0), 1e-9)
+        s = es["kv_pool"]
         out["configs"][str(model)] = {
             "tok_per_s": toks / decode_s,
             "decode_step_ms": 1e3 * decode_s / steps,
             "bytes_total": s["bytes_total"],
             "bytes_per_shard": s.get("bytes_total_per_shard",
                                      s["bytes_total"]),
-            "mesh": eng.stats.get("mesh"),
+            "mesh": es.get("mesh"),
             "tokens": {int(r.uid): [int(t) for t in r.out_tokens]
                        for r in done},
         }

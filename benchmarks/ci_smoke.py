@@ -35,7 +35,14 @@ Gated verdicts:
   trained predictor beats the untrained one on per-(layer, head) oracle
   kept-set overlap over held-out trace records, the distillation loss
   decreases, and the trained checkpoint serves end-to-end through
-  ``ServingConfig.lkv_checkpoint``.
+  ``ServingConfig.lkv_checkpoint``;
+* ``obs/overhead_verdict``     — the observability layer is near-free
+  and honest: obs-on serving throughput within 3% of obs-off on the CI
+  long-tail trace, every admitted request closes a well-nested span
+  tree in the emitted trace, and the streaming drift gauge matches the
+  offline ``bench_lookahead_quality`` computation on the same records
+  to float tolerance (also writes the ``BENCH_obs_metrics.json`` /
+  ``BENCH_obs_trace.json`` artifacts).
 
 The JSON artifact carries every reported benchmark row plus the verdict
 map, so a red gate links straight to the number that moved.
@@ -51,7 +58,8 @@ import time
 # every row name ending in ``_verdict`` gates the job
 SUITES = ("benchmarks.bench_kernels", "benchmarks.bench_serving",
           "benchmarks.bench_prefix", "benchmarks.bench_paged",
-          "benchmarks.bench_sharded", "benchmarks.bench_lookahead_quality")
+          "benchmarks.bench_sharded", "benchmarks.bench_lookahead_quality",
+          "benchmarks.bench_obs")
 
 
 def main() -> None:

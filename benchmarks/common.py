@@ -165,13 +165,27 @@ def ttft_stats(done) -> dict:
             "ttft_p95_ms": 1e3 * float(np.percentile(t, 95))}
 
 
+def engine_stats(eng) -> dict:
+    """The engine's per-run stats as a plain dict, read from the typed
+    metrics registry when the engine has one (``ContinuousEngine``) and
+    from the legacy ``stats`` dict otherwise (deprecated engines) — the
+    benches' one accessor, so none of them reaches into engine
+    internals."""
+    if getattr(eng, "metrics", None) is not None:
+        from repro.serving.engine import _LegacyStatsView
+        return _LegacyStatsView(eng)._as_dict()
+    return dict(eng.stats)
+
+
 def decode_step_stats(eng) -> dict:
     """Per-token decode step wall cost and the dispatch tier that served
-    it (kernel / gather / fallback / dense) — pulled from engine stats."""
-    steps = max(eng.stats.get("decode_steps", 0), 1)
+    it (kernel / gather / fallback / dense) — read from the engine's
+    metrics registry (legacy dict on the deprecated engines)."""
+    s = engine_stats(eng)
+    steps = max(s.get("decode_steps", 0), 1)
     return {
-        "decode_step_ms": 1e3 * eng.stats.get("decode_time_s", 0.0) / steps,
-        "decode_path": eng.stats.get("decode_path", "dense"),
+        "decode_step_ms": 1e3 * s.get("decode_time_s", 0.0) / steps,
+        "decode_path": s.get("decode_path", "dense"),
     }
 
 

@@ -184,11 +184,17 @@ def serve_shared_prefixes(cfg, params, lkv, args):
     cache = PrefixCache(chunk=chunk, max_bytes=64 << 20)
     eng, got, ttft_on = replay(cache)
     assert got == base, "prefix reuse changed served tokens"
-    p = eng.stats["prefix"]
+    # per-run counters come off the typed metrics registry (the legacy
+    # ``eng.stats`` dict is a deprecated view of the same numbers)
+    m = eng.metrics
+    hits = int(m.value("serving_prefix_hits_total"))
+    misses = int(m.value("serving_prefix_misses_total"))
+    skipped = int(m.value("serving_prefix_tokens_skipped_total"))
+    prompt_tokens = sum(len(r.prompt) for r in reqs)
     print(f"ttft mean: {ttft_off*1e3:.1f}ms uncached -> {ttft_on*1e3:.1f}ms "
           f"with prefix cache (tokens identical)")
-    print(f"hit-rate {p['hit_rate']:.2f}; {p['cached_tokens']} of "
-          f"{p['prompt_tokens']} prompt tokens served from the trie; "
+    print(f"hit-rate {hits / max(hits + misses, 1):.2f}; {skipped} of "
+          f"{prompt_tokens} prompt tokens served from the trie; "
           f"{cache.stats()['bytes'] / 1e6:.2f} MB resident")
 
 
@@ -235,18 +241,22 @@ def serve_paged_pool(cfg, params, lkv, args):
         ContinuousEngine(params, cfg, num_slots=3 * dense_slots,
                          kv_pool=pool, **kw))
     assert paged_tok == dense_tok, "paged serving changed tokens"
-    s = paged_eng.stats["kv_pool"]
+    # pool geometry straight from the pool; run counters off the registry
+    s = pool.stats()
+    mp = paged_eng.metrics
     print(f"equal KV budget: dense {dense_eng.kv_device_bytes() / 1e3:.0f}KB"
           f" ({dense_slots} slots) vs paged "
           f"{paged_eng.kv_device_bytes() / 1e3:.0f}KB "
           f"({s['blocks_total']} x {block}-row blocks)")
-    print(f"peak concurrency: dense {dense_eng.stats['max_concurrency']} -> "
-          f"paged {paged_eng.stats['max_concurrency']} "
+    print(f"peak concurrency: dense "
+          f"{int(dense_eng.metrics.value('serving_max_concurrency'))} -> "
+          f"paged {int(mp.value('serving_max_concurrency'))} "
           f"(tokens bit-identical; wall {dense_wall:.2f}s -> "
           f"{paged_wall:.2f}s)")
     print(f"pool high water {s['high_water_blocks']}/{s['blocks_total']} "
-          f"blocks, {paged_eng.stats['preemptions']} preemptions, "
-          f"{paged_eng.stats['admission_blocked']} gated admissions")
+          f"blocks, {int(mp.value('serving_preemptions_total'))} "
+          f"preemptions, {int(mp.value('serving_admission_blocked_total'))} "
+          f"gated admissions")
 
 
 def main():

@@ -22,9 +22,29 @@ from repro.core import policies
 from repro.core.lookahead import (init_lookahead_params,
                                   load_lookahead_params)
 from repro.models import transformer as tf
+from repro.obs import TraceRecorder, phase_table
 from repro.serving import (BucketedEngine, ChunkingConfig, ContinuousEngine,
                            DecodeEvictionConfig, KVBlockPool, PrefixCache,
                            Request, ServingConfig, ServingEngine)
+
+
+def _print_phase_table(trace, done) -> None:
+    """Per-request phase-latency breakdown from the span trace — where
+    each request's TTFT actually went, instead of a flat stats dump."""
+    rows = phase_table(trace, [r.uid for r in done])
+    print(f"{'uid':>4s} {'pfx_skip':>8s} {'prefill_ms':>10s} "
+          f"{'first_tok_ms':>12s} {'decode_ms':>9s} {'sweeps':>6s} "
+          f"{'sweep_ms':>8s} {'replays':>7s} {'outcome':>9s}")
+    for row in rows:
+        if row["outcome"] == "missing":
+            print(f"{row['uid']:4d} {'never admitted':>14s}")
+            continue
+        ft = (f"{row['first_token_ms']:12.1f}"
+              if row["first_token_ms"] is not None else f"{'n/a':>12s}")
+        print(f"{row['uid']:4d} {row['prefix_skip_tokens']:8d} "
+              f"{row['prefill_ms']:10.1f} {ft} {row['decode_ms']:9.1f} "
+              f"{row['sweeps']:6d} {row['sweep_ms']:8.1f} "
+              f"{row['replays']:7d} {row['outcome']:>9s}")
 
 
 def main():
@@ -72,6 +92,17 @@ def main():
                     help="tensor-parallel shards: serve one sharded model "
                          "over a (data, model) device mesh (continuous "
                          "engine; 1 = single-device, the old behavior)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the engine's typed-metrics registry as a "
+                         "JSON snapshot to this path after the run "
+                         "(chunked continuous engine)")
+    ap.add_argument("--prom-snapshot", default="",
+                    help="write the registry in Prometheus text exposition "
+                         "format to this path after the run")
+    ap.add_argument("--trace-out", default="",
+                    help="write the per-request span trace here: a .jsonl "
+                         "path gets raw events, anything else Chrome "
+                         "trace-event JSON (open in https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -116,6 +147,7 @@ def main():
             mesh = make_host_mesh(model=args.mesh_model)
             print(f"mesh: {dict(mesh.shape)} over "
                   f"{len(jax.devices())} devices")
+    trace = None  # set on the chunked continuous path
     if args.continuous:
         if args.policy in policies.MULTI_PASS or args.policy == "full":
             # draft-based baselines and 'full' cannot stream prefill chunks;
@@ -146,6 +178,10 @@ def main():
                       "single-device; ignoring --decode-evict under "
                       "--mesh-model")
                 decode_evict = False
+            # span tracing is always on for the chunked engine: it is the
+            # per-request latency attribution this launcher reports, and
+            # the obs bench gates its overhead at < 3% of throughput
+            trace = TraceRecorder()
             sc = ServingConfig(
                 policy=args.policy,
                 evict=EvictionConfig(budget=args.budget, draft_len=8),
@@ -157,7 +193,7 @@ def main():
                     max_context=max(args.n_in, args.chunk)),
                 num_slots=args.slots, max_new_tokens=args.max_new,
                 eos_id=-1, prefix_cache=prefix_cache, kv_pool=kv_pool,
-                mesh=mesh)
+                mesh=mesh, trace=trace)
             eng = ContinuousEngine(params, cfg, sc, lkv_params=lkv)
         shared = (args.shared_prefix // args.chunk) * args.chunk
         system = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
@@ -172,23 +208,34 @@ def main():
         t0 = time.time()
         done = eng.run(reqs)
         wall = time.time() - t0
+        if trace is not None:
+            # where each request's latency went, phase by phase — the
+            # span trace replaces the old flat stats dump
+            _print_phase_table(trace, done)
         if getattr(eng, "prefix_cache", None) is not None:
-            p = eng.stats["prefix"]
-            print(f"prefix cache: hit-rate {p['hit_rate']:.2f}, "
-                  f"{p['cached_tokens']}/{p['prompt_tokens']} prompt tokens "
+            m = eng.metrics
+            hits = int(m.value("serving_prefix_hits_total"))
+            misses = int(m.value("serving_prefix_misses_total"))
+            skipped = int(m.value("serving_prefix_tokens_skipped_total"))
+            prompt_tokens = sum(len(r.prompt) for r in done)
+            print(f"prefix cache: hit-rate "
+                  f"{hits / max(hits + misses, 1):.2f}, "
+                  f"{skipped}/{prompt_tokens} prompt tokens "
                   f"served from shared prefixes, "
                   f"{eng.prefix_cache.stats()['bytes'] / 1e6:.2f} MB resident")
         if getattr(eng, "pool", None) is not None:
-            s = eng.stats["kv_pool"]
+            m = eng.metrics
+            s = eng.pool.stats()
             print(f"kv pool: {s['blocks_total']} x {s['block_size']}-row "
                   f"blocks ({s['bytes_total'] / 1e6:.2f} MB), high water "
                   f"{s['high_water_blocks']} blocks, peak concurrency "
-                  f"{eng.stats['max_concurrency']}, "
-                  f"{eng.stats['preemptions']} preemptions, "
+                  f"{int(m.value('serving_max_concurrency'))}, "
+                  f"{int(m.value('serving_preemptions_total'))} preemptions, "
                   f"{s['blocks_pinned_prefix']} blocks pinned by the "
                   f"prefix cache")
-            if eng.stats.get("decode_evict_sweeps") is not None:
-                print(f"decode eviction: {eng.stats['decode_evict_sweeps']} "
+            if sc.decode_evict.enabled:
+                print(f"decode eviction: "
+                      f"{int(m.value('serving_decode_evict_sweeps_total'))} "
                       f"sweeps reclaimed {s['blocks_reclaimed_decode']} "
                       f"blocks mid-generation")
     else:
@@ -214,6 +261,34 @@ def main():
     for r in done[:2]:
         print(f"  req {r.uid}: {len(r.out_tokens)} tokens "
               f"{r.out_tokens[:8]}...")
+    # observability artifacts (chunked continuous engine only: the
+    # deprecated engines predate the registry/tracer)
+    metrics = getattr(eng, "metrics", None)
+    if args.metrics_json:
+        if metrics is None:
+            print("note: --metrics-json needs the chunked continuous "
+                  "engine; skipped")
+        else:
+            metrics.to_json(args.metrics_json)
+            print(f"metrics snapshot -> {args.metrics_json}")
+    if args.prom_snapshot:
+        if metrics is None:
+            print("note: --prom-snapshot needs the chunked continuous "
+                  "engine; skipped")
+        else:
+            with open(args.prom_snapshot, "w") as f:
+                f.write(metrics.prometheus_text())
+            print(f"prometheus snapshot -> {args.prom_snapshot}")
+    if args.trace_out:
+        if trace is None:
+            print("note: --trace-out needs the chunked continuous "
+                  "engine; skipped")
+        elif args.trace_out.endswith(".jsonl"):
+            trace.to_jsonl(args.trace_out)
+            print(f"span trace (jsonl) -> {args.trace_out}")
+        else:
+            trace.to_chrome(args.trace_out)
+            print(f"span trace (perfetto) -> {args.trace_out}")
 
 
 if __name__ == "__main__":

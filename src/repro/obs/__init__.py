@@ -1,0 +1,32 @@
+"""First-class observability for the serving stack.
+
+Three cooperating pieces (see the README's "Observability" section):
+
+* ``obs.metrics``  — a typed metrics registry (Counter / Gauge /
+  Histogram / Info, optional labels) that replaces the engines' ad-hoc
+  ``stats`` dicts, with JSON-snapshot and Prometheus text-exposition
+  export.  Component state (pool, prefix cache, compile cache,
+  scheduler) is mirrored through *callback-backed* gauges evaluated at
+  collection time, so binding a component costs nothing on the hot path.
+* ``obs.trace``    — per-request span tracing (admission → prefix-cache
+  probe → prefill chunks → decode → sweeps → preemption/replay →
+  retirement/harvest, plus compile events), exported as JSONL and as
+  Chrome trace-event JSON viewable in Perfetto.
+* ``obs.quality``  — the streaming lookahead drift monitor: retired
+  requests are sampled into a held-out ring and periodically re-scored
+  against the frozen-model oracle, exposing per-(layer, head) kept-set
+  overlap as a gauge — the drift gate the ROADMAP's online adapter
+  refresh needs.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, Info,
+                               MetricsRegistry)
+from repro.obs.quality import DriftMonitor, head_kept_sets, kept_overlaps
+from repro.obs.trace import (TraceRecorder, phase_table, request_span_trees,
+                             validate_trace)
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "Info",
+    "TraceRecorder", "validate_trace", "request_span_trees", "phase_table",
+    "DriftMonitor", "head_kept_sets", "kept_overlaps",
+]

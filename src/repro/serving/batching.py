@@ -41,6 +41,47 @@ def _compile_count(fns: dict) -> int:
     return total
 
 
+class _CompileTracedJit:
+    """Thin jitted-callable proxy that surfaces XLA compilations as trace
+    events.  A jitted program compiles lazily on the first call with a new
+    shape signature; the proxy detects that via the ``_cache_size`` delta
+    around each call (the same private API ``_compile_count`` reads) and
+    emits a ``jit_compile`` instant on the engine track with the cache key
+    and the call's wall time.  With no trace attached (the default) a call
+    is a single extra attribute read."""
+
+    __slots__ = ("fn", "_cache", "_key")
+
+    def __init__(self, fn, cache: "ChunkCompileCache", key):
+        self.fn = fn
+        self._cache = cache
+        self._key = key
+
+    def _cache_size(self) -> int:
+        return self.fn._cache_size()
+
+    def __call__(self, *args, **kwargs):
+        tr = self._cache.trace
+        if tr is None:
+            return self.fn(*args, **kwargs)
+        try:
+            before = self.fn._cache_size()
+        except Exception:  # pragma: no cover - older jax
+            before = None
+        import time as _time
+        t = _time.perf_counter()
+        out = self.fn(*args, **kwargs)
+        if before is not None:
+            try:
+                compiled = self.fn._cache_size() > before
+            except Exception:  # pragma: no cover - older jax
+                compiled = False
+            if compiled:
+                tr.instant("jit_compile", tr.ENGINE, key=str(self._key),
+                           ms=(_time.perf_counter() - t) * 1e3)
+        return out
+
+
 class ChunkCompileCache:
     """jit compile cache for chunked prefill, keyed ``(kind, chunk, batch,
     policy)`` — no prompt-length ladder, no padded/exact split.
@@ -63,6 +104,10 @@ class ChunkCompileCache:
         # ``common.sharding.mesh_signature``) joins the key.  Meshless
         # engines keep the bare 4-tuple keys tests pin.
         self._mesh_sig = mesh_sig
+        # observability hooks (repro.obs): the engine points ``trace`` at
+        # its TraceRecorder so XLA compilations show up as engine-track
+        # events next to the serving spans they stall
+        self.trace = None
 
     def get(self, kind: str, chunk: int, batch: int, policy: str):
         key = (kind, chunk, batch, policy)
@@ -71,7 +116,8 @@ class ChunkCompileCache:
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
-            fn = jax.jit(self._build(kind, policy))
+            fn = _CompileTracedJit(jax.jit(self._build(kind, policy)),
+                                   self, key)
             self._fns[key] = fn
         else:
             self.hits += 1
@@ -91,6 +137,13 @@ class ChunkCompileCache:
         return {"entries": len(self._fns), "hits": self.hits,
                 "misses": self.misses, "compiles": self.compile_count(),
                 "keys": self.keys}
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror ``stats()`` as ``compile_cache_*`` callback gauges on the
+        engine's registry (``keys`` is a list and stays out)."""
+        from repro.obs.metrics import bind_stat_gauges
+        bind_stat_gauges(registry, "compile_cache", self.stats,
+                         keys=("entries", "hits", "misses", "compiles"))
 
 
 # ---------------------------------------------------------------------------

@@ -146,6 +146,17 @@ class ServingConfig:
     # as ``hook.on_retire(request)`` when a request retires, while its
     # generated continuation — the "future" the oracle needs — is in hand
     harvest: Any = None
+    # observability (repro.obs).  ``trace`` is an obs.trace.TraceRecorder
+    # the engine emits per-request spans into; ``drift`` is an
+    # obs.quality.DriftMonitor fed from the retirement hook.  Both bind
+    # to the engine's metrics registry at construction.
+    trace: Any = None  # obs.trace.TraceRecorder | None
+    drift: Any = None  # obs.quality.DriftMonitor | None
+    # device-sync the engine's timers (block on each chunk's output
+    # arrays before stamping) so they measure execution, not dispatch,
+    # under JAX async dispatch.  None (default): sync exactly when a
+    # trace is attached — untimed serving keeps the async pipeline.
+    sync_timers: Optional[bool] = None
 
     def __post_init__(self):
         self.decode_evict = DecodeEvictionConfig.coerce(self.decode_evict)

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from collections.abc import Mapping
 from functools import partial
 from typing import Optional
 
@@ -52,6 +53,8 @@ from repro.core.eviction import select_topk
 from repro.kernels import ops
 from repro.kernels.ref import NEG_INF
 from repro.models import transformer as tf
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import request_track
 from repro.serving.batching import (DEFAULT_BUCKETS, ChunkCompileCache,
                                     PrefillCompileCache, _batch_bucket,
                                     _bucket_for, _pad_to_bucket)
@@ -348,13 +351,32 @@ class _SlotDecodeMixin:
                 sched.retire(r, now=now)
                 active[slot] = False
                 self._on_retire(slot, r)
+                m = getattr(self, "_m_retired", None)
+                if m is not None:
+                    m.inc()
+                tr = getattr(self, "trace", None)
+                tid = request_track(r.uid)
+                if tr is not None:
+                    tr.end("decode", tid)
                 # gt_oracle harvest: the retired request carries the very
                 # future the oracle policy needs (its generated tokens), so
                 # this is the one moment importance targets can be captured
                 # from live traffic (deprecated engines lack the hook)
                 h = getattr(self, "harvest", None)
                 if h is not None:
+                    if tr is not None:
+                        tr.begin("harvest", tid)
                     h.on_retire(r)
+                    if tr is not None:
+                        tr.end("harvest", tid)
+                # lookahead drift monitor (repro.obs.quality): same moment,
+                # same reason — the generated future is in hand
+                d = getattr(self, "drift", None)
+                if d is not None:
+                    d.on_retire(r)
+                if tr is not None:
+                    tr.instant("retire", tid, tokens=len(r.out_tokens))
+                    tr.end("request", tid, outcome="done")
                 self._release_slot(slot)
 
     def _on_retire(self, slot: int, req: Request) -> None:
@@ -367,6 +389,66 @@ class _SlotDecodeMixin:
         """Retirement hook: the paged engine returns the slot's KV blocks
         to the pool here — the memory half of retiring (dense slot caches
         have nothing to free)."""
+
+
+class _LegacyStatsView(Mapping):
+    """Read-only mapping reproducing the pre-registry ``engine.stats``
+    dict — same keys, same conditional presence — from the typed metrics
+    registry, so external readers keep working through the deprecation.
+    Empty before the first ``run()``; the nested component dicts
+    (``prefix_cache`` / ``prefix`` / ``kv_pool``) are computed live from
+    the components instead of being frozen at run end."""
+
+    __slots__ = ("_eng",)
+
+    def __init__(self, eng: "ContinuousEngine"):
+        self._eng = eng
+
+    def _as_dict(self) -> dict:
+        e = self._eng
+        if not e._run_started:
+            return {}
+        v = e.metrics.value
+        d = {
+            "prefill_chunks": int(v("serving_prefill_chunks_total")),
+            "decode_chunks": int(v("serving_decode_chunks_total")),
+            "decode_steps": int(v("serving_decode_steps_total")),
+            "decode_time_s": float(v("serving_decode_seconds_total")),
+            "max_prefill_between_decode":
+                int(v("serving_max_prefill_between_decode")),
+            "max_concurrency": int(v("serving_max_concurrency")),
+        }
+        d.update(e._run_info)
+        if e.prefix_cache is not None:
+            d["prefix_hits"] = int(v("serving_prefix_hits_total"))
+            d["prefix_misses"] = int(v("serving_prefix_misses_total"))
+            d["prefix_tokens_skipped"] = \
+                int(v("serving_prefix_tokens_skipped_total"))
+            d["prefix_cache"] = e.prefix_cache.stats()
+            if e._last_sched is not None:
+                d["prefix"] = e._last_sched.prefix_stats()
+        if e.pool is not None:
+            d["preemptions"] = int(v("serving_preemptions_total"))
+            d["admission_blocked"] = \
+                int(v("serving_admission_blocked_total"))
+            if e._score_dev is not None:
+                d["decode_evict_sweeps"] = \
+                    int(v("serving_decode_evict_sweeps_total"))
+            if e._last_sched is not None:
+                d["kv_pool"] = e._last_sched.pool_stats()
+        return d
+
+    def __getitem__(self, key):
+        return self._as_dict()[key]
+
+    def __iter__(self):
+        return iter(self._as_dict())
+
+    def __len__(self):
+        return len(self._as_dict())
+
+    def __repr__(self):
+        return f"_LegacyStatsView({self._as_dict()!r})"
 
 
 class ContinuousEngine(_SlotDecodeMixin):
@@ -515,7 +597,6 @@ class ContinuousEngine(_SlotDecodeMixin):
                                              mesh_sig=self._mesh_sig)
         self._decode_fns: dict = {}
         self._insert_fn = jax.jit(tf.insert_request_cache)
-        self.stats: dict = {}
         # fused sampling epilogue (core/policies.py): temperature / top-k /
         # top-p run inside the jitted decode chunk with per-request keys
         # folded on token position — greedy (None / temperature 0) keeps
@@ -583,6 +664,127 @@ class ContinuousEngine(_SlotDecodeMixin):
                 assert prefix_cache.pool is kv_pool, \
                     "prefix cache bound to a different block pool"
         self.capture_admission = config.capture_admission
+        # -- observability (repro.obs) ----------------------------------
+        # one typed registry per engine replaces the historical ad-hoc
+        # ``stats`` dict (kept below as a deprecated read-only view);
+        # components mirror their state through callback gauges, the
+        # tracer (when attached) receives per-request spans
+        self.metrics = MetricsRegistry()
+        self.drift = config.drift
+        self.trace = None
+        self._sync_timers = False
+        self._run_started = False  # legacy view: {} before the first run()
+        self._last_sched: Optional[SlotScheduler] = None
+        self._run_info: dict = {}
+        self._uid_seq: dict = {}  # uid -> first admission_seq (replay link)
+        self._serve_seq = 0
+        self._register_metrics()
+        self.chunk_cache.bind_metrics(self.metrics)
+        if self.pool is not None:
+            self.pool.bind_metrics(self.metrics)
+        if self.prefix_cache is not None:
+            self.prefix_cache.bind_metrics(self.metrics)
+        self.set_trace(config.trace)
+
+    # -- observability ----------------------------------------------------
+    def _register_metrics(self) -> None:
+        m = self.metrics
+        sync_note = (
+            "Host perf_counter timer; whether it measures synced execution "
+            "(the engine blocks on the chunk's output arrays before "
+            "stamping) or async dispatch plus the token sync is recorded "
+            "in serving_build's sync_timers key.")
+        self._m_prefill_chunks = m.counter(
+            "serving_prefill_chunks_total",
+            "Prefill chunk programs dispatched.")
+        self._m_prefill_seconds = m.counter(
+            "serving_prefill_seconds_total",
+            "Wall seconds spent in prefill chunk programs. " + sync_note)
+        self._m_prefill_chunk_hist = m.histogram(
+            "serving_prefill_chunk_seconds",
+            "Per-prefill-chunk wall time distribution. " + sync_note)
+        self._m_decode_chunks = m.counter(
+            "serving_decode_chunks_total",
+            "Slot-batched decode chunk programs dispatched.")
+        self._m_decode_steps = m.counter(
+            "serving_decode_steps_total",
+            "Decode steps advanced (chunk dispatches x chunk length).")
+        self._m_decode_seconds = m.counter(
+            "serving_decode_seconds_total",
+            "Wall seconds spent in decode chunks (the legacy "
+            "stats['decode_time_s']). " + sync_note)
+        self._m_decode_chunk_hist = m.histogram(
+            "serving_decode_chunk_seconds",
+            "Per-decode-chunk wall time distribution. " + sync_note)
+        self._m_ttft = m.histogram(
+            "serving_ttft_seconds",
+            "Time to first token per request, from schedulability to the "
+            "first emitted token (re-admissions keep the original stamp).")
+        self._m_max_prefill_between_decode = m.gauge(
+            "serving_max_prefill_between_decode",
+            "Worst count of prefill chunks run between two decode chunks "
+            "while slots were live — the decode-stall bound the "
+            "token-budget step enforces.")
+        self._m_max_concurrency = m.gauge(
+            "serving_max_concurrency",
+            "High-water mark of concurrently running requests.")
+        self._m_requests = m.counter(
+            "serving_requests_total", "Requests submitted to run().")
+        self._m_retired = m.counter(
+            "serving_requests_retired_total",
+            "Requests retired (finished) across admission and decode.")
+        self._m_prefix_hits = m.counter(
+            "serving_prefix_hits_total",
+            "Admissions resumed from a prefix-cache snapshot.")
+        self._m_prefix_misses = m.counter(
+            "serving_prefix_misses_total",
+            "Admissions that probed the prefix cache and missed.")
+        self._m_prefix_tokens_skipped = m.counter(
+            "serving_prefix_tokens_skipped_total",
+            "Prompt tokens whose prefill (attention and score "
+            "accumulation) was skipped via prefix-cache hits.")
+        self._m_preemptions = m.counter(
+            "serving_preemptions_total",
+            "Running requests preempted to the queue (paged pool dry).")
+        self._m_admission_blocked = m.counter(
+            "serving_admission_blocked_total",
+            "Prefilled admissions bounced back to the queue head because "
+            "the pool could not place their kept rows.")
+        self._m_sweeps = m.counter(
+            "serving_decode_evict_sweeps_total",
+            "Decode-time evict-and-compact sweeps on the paged pool.")
+        self._m_build = m.info(
+            "serving_build",
+            "Engine build facts: score/decode dispatch path, device mesh, "
+            "and whether timers are device-synced (sync_timers).")
+
+    def set_trace(self, trace) -> None:
+        """Attach (or detach, with ``None``) an ``obs.trace.TraceRecorder``.
+
+        Resolves the timer-sync mode: ``config.sync_timers`` when set,
+        else sync exactly when tracing — so untimed serving keeps the
+        async-dispatch pipeline — and propagates the recorder to the
+        compile cache (jit_compile events) and the drift monitor."""
+        self.trace = trace
+        st = self.config.sync_timers
+        self._sync_timers = bool(trace is not None if st is None else st)
+        if trace is not None:
+            trace.sync = self._sync_timers
+        self.chunk_cache.trace = trace
+        if self.drift is not None:
+            self.drift.bind(metrics=self.metrics, trace=trace)
+
+    @property
+    def stats(self) -> "_LegacyStatsView":
+        """Deprecated: the historical per-run ``stats`` dict, as a
+        read-only view computed from the metrics registry.  Read
+        ``engine.metrics`` (``value()`` / ``snapshot()`` /
+        ``prometheus_text()``) instead."""
+        warnings.warn(
+            "ContinuousEngine.stats is deprecated; read the typed metrics "
+            "registry at engine.metrics (see the README's stats() -> "
+            "registry migration table)", DeprecationWarning, stacklevel=2)
+        return _LegacyStatsView(self)
 
     # -- compile-cache bodies ------------------------------------------------
     def _build(self, kind: str, policy: str):
@@ -635,7 +837,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         if self.pool is not None:
             s = self.pool.stats()
             out["pool"] = s
-            peak = self.stats.get("max_concurrency", 0)
+            peak = int(self.metrics.value("serving_max_concurrency"))
             if peak:
                 # measured peak per-request footprint (prefix-cache pins
                 # are shared capital, not per-request cost)
@@ -706,43 +908,40 @@ class ContinuousEngine(_SlotDecodeMixin):
         # patterned local:global archs trace the window inside the layer
         # scan, which routes ops.chunk_attention to the jnp fallback
         static_window = tf.is_global_flags(self.cfg) is None
-        self.stats = {"prefill_chunks": 0, "decode_chunks": 0,
-                      "decode_steps": 0, "decode_time_s": 0.0,
-                      "max_prefill_between_decode": 0,
-                      "max_concurrency": 0,
-                      "score_path": ("pallas-fused"
-                                     if ops.use_pallas() and static_window
-                                     else "jnp-fallback"),
-                      # which paged_decode_attention tier serves this run
-                      # (kernel / gather / fallback); "dense" when unpooled
-                      "decode_path": (ops.paged_decode_path(self._paged_depth)
-                                      if self.pool is not None else "dense"),
-                      # device mesh this engine serves on (None: single
-                      # device); bench rows carry it next to decode_path
-                      "mesh": ({n: int(self.mesh.shape[n])
-                                for n in self.mesh.axis_names}
-                               if self.mesh is not None else None)}
-        if self.prefix_cache is not None:
-            self.stats.update(prefix_hits=0, prefix_misses=0,
-                              prefix_tokens_skipped=0)
-        if self.pool is not None:
-            self.stats.update(preemptions=0, admission_blocked=0)
-            if self._score_dev is not None:
-                self.stats["decode_evict_sweeps"] = 0
+        # fresh collection epoch per run (the historical per-run stats
+        # semantics benches rely on: warm up, then time the same engine);
+        # callback gauges mirror live component state and are untouched
+        self.metrics.reset()
+        self._run_started = True
+        self._last_sched = sched
+        self._uid_seq = {}
+        sched.bind_metrics(self.metrics)
+        self._run_info = {
+            "score_path": ("pallas-fused"
+                           if ops.use_pallas() and static_window
+                           else "jnp-fallback"),
+            # which paged_decode_attention tier serves this run
+            # (kernel / gather / fallback); "dense" when unpooled
+            "decode_path": (ops.paged_decode_path(self._paged_depth)
+                            if self.pool is not None else "dense"),
+            # device mesh this engine serves on (None: single device);
+            # bench rows carry it next to decode_path
+            "mesh": ({n: int(self.mesh.shape[n])
+                      for n in self.mesh.axis_names}
+                     if self.mesh is not None else None),
+        }
+        self._m_build.set(sync_timers=self._sync_timers, **self._run_info)
+        self._m_requests.inc(len(requests))
 
         try:
             self._run_loop(sched, tok, live, active, remaining, last_emit,
                            t0)
         finally:
-            if self.prefix_cache is not None:
-                self.stats["prefix_cache"] = self.prefix_cache.stats()
-                self.stats["prefix"] = sched.prefix_stats()
             if self.pool is not None:
                 # a failed run must not leak blocks into the next one (a
                 # clean run has already freed every slot at retirement)
                 for s in range(self.num_slots):
                     self._free_slot_blocks(s)
-                self.stats["kv_pool"] = sched.pool_stats()
         return sched.finished
 
     def _run_loop(self, sched, tok, live, active, remaining, last_emit,
@@ -774,11 +973,9 @@ class ContinuousEngine(_SlotDecodeMixin):
                                                     remaining, last_emit, t0)
                             pf = None
                             break
-                self.stats["max_concurrency"] = max(
-                    self.stats["max_concurrency"], len(sched.running))
+                self._m_max_concurrency.max(len(sched.running))
                 if active.any():
-                    self.stats["max_prefill_between_decode"] = max(
-                        self.stats["max_prefill_between_decode"], since_decode)
+                    self._m_max_prefill_between_decode.max(since_decode)
                     since_decode = 0
                     steps = self._pick_chunk(remaining, active)
                     if self.pool is not None:
@@ -805,6 +1002,10 @@ class ContinuousEngine(_SlotDecodeMixin):
                             continue  # every live slot was preempted
                         dispatched = active.copy()
                         fn = self._decode_fn_paged(steps)
+                        tr = self.trace
+                        if tr is not None:
+                            tr.begin("decode_chunk", tr.ENGINE, steps=steps,
+                                     slots=int(active.sum()))
                         t_dec = time.perf_counter()
                         # _snapshot the host mirrors before handing them
                         # to jax: dispatch is async and the host->device
@@ -826,6 +1027,11 @@ class ContinuousEngine(_SlotDecodeMixin):
                                 _snapshot(self._npos_h[:, None]),
                                 self.pool.tree(), _snapshot(active),
                                 _snapshot(self._seeds_h))
+                        if self._sync_timers:
+                            # device-time attribution: block on the whole
+                            # output pytree so the stamp below measures
+                            # execution, not dispatch
+                            jax.block_until_ready((tok, ptree, toks))
                         self.pool.set_tree(ptree)
                         # mirror the device advance rule exactly: slots
                         # active at dispatch move `steps`, cursors clamp
@@ -835,14 +1041,24 @@ class ContinuousEngine(_SlotDecodeMixin):
                         self._npos_h[dispatched] += steps
                     else:
                         fn = self._decode_fn(steps)
+                        tr = self.trace
+                        if tr is not None:
+                            tr.begin("decode_chunk", tr.ENGINE, steps=steps,
+                                     slots=int(active.sum()))
                         t_dec = time.perf_counter()
                         tok, live, toks = fn(self.params, tok, live,
                                              jnp.asarray(active),
                                              jnp.asarray(self._seeds_h))
+                        if self._sync_timers:
+                            jax.block_until_ready((tok, live, toks))
                     toks_np = np.asarray(toks)  # device sync: tokens landed
-                    self.stats["decode_chunks"] += 1
-                    self.stats["decode_steps"] += steps
-                    self.stats["decode_time_s"] += time.perf_counter() - t_dec
+                    dt = time.perf_counter() - t_dec
+                    if tr is not None:
+                        tr.end("decode_chunk", tr.ENGINE)
+                    self._m_decode_chunks.inc()
+                    self._m_decode_steps.inc(steps)
+                    self._m_decode_seconds.inc(dt)
+                    self._m_decode_chunk_hist.observe(dt)
                     self._collect(toks_np, steps, sched, active,
                                   remaining, last_emit, t0)
                 elif pf is None:
@@ -873,7 +1089,24 @@ class ContinuousEngine(_SlotDecodeMixin):
     def _begin_prefill(self, req: Request) -> _InflightPrefill:
         n = len(req.prompt)
         cap = self._request_context(n)
+        tr = self.trace
+        tid = request_track(req.uid)
+        if tr is not None:
+            # one "request" span per serve attempt; a re-serve (preemption
+            # replay, or an admission bounced off a dry pool) opens a new
+            # span whose replay_of carries the original admission_seq —
+            # the replay <-> original link the span tests assert
+            seq = self._serve_seq
+            self._serve_seq += 1
+            args = {"uid": req.uid, "admission_seq": seq, "n_prompt": n}
+            if req.uid in self._uid_seq:
+                args["replay_of"] = self._uid_seq[req.uid]
+            else:
+                self._uid_seq[req.uid] = seq
+            tr.begin("request", tid, **args)
         if self.prefix_cache is not None:
+            if tr is not None:
+                tr.begin("prefix_probe", tid)
             # only snapshots streamed under this request's KV-buffer rung
             # match — the condition for a bitwise-identical resume
             entry = self.prefix_cache.lookup(req.prompt, capacity=cap)
@@ -888,10 +1121,14 @@ class ContinuousEngine(_SlotDecodeMixin):
                 pf.logits = logits  # the boundary chunk's next-token logits
                 pf.tip = entry
                 req.cached_prefix_tokens = entry.depth
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_tokens_skipped"] += entry.depth
+                self._m_prefix_hits.inc()
+                self._m_prefix_tokens_skipped.inc(entry.depth)
+                if tr is not None:
+                    tr.end("prefix_probe", tid, hit=True, depth=entry.depth)
                 return pf
-            self.stats["prefix_misses"] += 1
+            self._m_prefix_misses.inc()
+            if tr is not None:
+                tr.end("prefix_probe", tid, hit=False, depth=0)
         state = tf.init_chunk_state(self.cfg, self.policy, 1, cap)
         return _InflightPrefill(req, state, n)
 
@@ -900,10 +1137,23 @@ class ContinuousEngine(_SlotDecodeMixin):
         seg = pf.req.prompt[pf.s:pf.s + self.chunk]
         blk[0, :len(seg)] = seg
         fn = self.chunk_cache.get("chunk", self.chunk, 1, self.policy)
+        tr = self.trace
+        if tr is not None:
+            tr.begin("prefill_chunk", request_track(pf.req.uid), s=pf.s)
+        t_pf = time.perf_counter()
         pf.state, pf.logits = fn(self.params, pf.state, jnp.asarray(blk),
                                  jnp.asarray(pf.n, jnp.int32))
+        if self._sync_timers:
+            # device-time attribution: without the block the stamp below
+            # measures dispatch only (JAX async dispatch)
+            jax.block_until_ready(pf.logits)
+        dt = time.perf_counter() - t_pf
+        if tr is not None:
+            tr.end("prefill_chunk", request_track(pf.req.uid))
         pf.s += self.chunk
-        self.stats["prefill_chunks"] += 1
+        self._m_prefill_chunks.inc()
+        self._m_prefill_seconds.inc(dt)
+        self._m_prefill_chunk_hist.observe(dt)
         # cache the boundary just crossed (whole-chunk prefixes only — a
         # partial final chunk contains pad rows and is never cacheable)
         if self.prefix_cache is not None and pf.s <= pf.n:
@@ -918,8 +1168,12 @@ class ContinuousEngine(_SlotDecodeMixin):
 
     def _admit(self, pf, sched, tok, live, active, remaining, last_emit, t0):
         r = pf.req
+        tr = self.trace
+        tid = request_track(r.uid)
         fn = self.chunk_cache.get("finalize", self.chunk, 1, self.policy)
         seeds = _request_seeds([r])
+        if tr is not None:
+            tr.begin("finalize", tid)
         cache = fn(self.params, self.lkv_params, pf.state,
                    jnp.asarray(pf.n, jnp.int32), seeds)
         if self.prefix_cache is not None and pf.tip is not None:
@@ -930,7 +1184,11 @@ class ContinuousEngine(_SlotDecodeMixin):
                 key: np.asarray(val) for key, val in cache["attn"].items()
                 if key in ("mask", "pos", "score")
             }
+        if self._sync_timers:
+            jax.block_until_ready(cache)
         pf.logits.block_until_ready()
+        if tr is not None:
+            tr.end("finalize", tid)
         if self.pool is not None:
             slot = self._paged_place(sched, r, cache)
             if slot is None:
@@ -938,8 +1196,10 @@ class ContinuousEngine(_SlotDecodeMixin):
                 # during this prefill: back to the queue head, re-prefill
                 # when blocks free (FCFS order and served tokens unchanged
                 # — greedy decode is deterministic)
-                self.stats["admission_blocked"] += 1
+                self._m_admission_blocked.inc()
                 sched.push_front(r)
+                if tr is not None:
+                    tr.end("request", tid, outcome="admission_blocked")
                 return tok, live
         else:
             slot = sched.place(r)
@@ -949,6 +1209,8 @@ class ContinuousEngine(_SlotDecodeMixin):
         first = self._first_token(pf.logits, r.eviction_seed, pf.n)
         tok = tok.at[slot, 0].set(first)
         r.out_tokens = [first]
+        if tr is not None:
+            tr.instant("first_token", tid, token=first)
         if r.first_token_s is None:
             # a re-admitted (preempted) request keeps its original stamp:
             # the client received its first token then, and the replayed
@@ -956,6 +1218,7 @@ class ContinuousEngine(_SlotDecodeMixin):
             # max_gap_s / tpot_s, where the stall honestly belongs
             r.first_token_s = now
             r.ttft_s = now - r.enqueue_s
+            self._m_ttft.observe(r.ttft_s)
         if r.preempt_emit_s is not None:
             # the client-visible stall spans preemption to this re-emit
             r.max_gap_s = max(r.max_gap_s, now - r.preempt_emit_s)
@@ -966,9 +1229,15 @@ class ContinuousEngine(_SlotDecodeMixin):
             active[slot] = False
             self._on_retire(slot, r)
             self._release_slot(slot)
+            self._m_retired.inc()
+            if tr is not None:
+                tr.instant("retire", tid, tokens=len(r.out_tokens))
+                tr.end("request", tid, outcome="done")
         else:
             active[slot] = True
             remaining[slot] = r.max_new_tokens - 1
+            if tr is not None:
+                tr.begin("decode", tid)
         return tok, live
 
     # -- paged-KV internals (serving/kv_pool.py) --------------------------
@@ -1182,6 +1451,9 @@ class ContinuousEngine(_SlotDecodeMixin):
                 self._slot_blocks[slot].append(int(ids[0]))
             if aborted:
                 continue
+            tr = self.trace
+            if tr is not None:
+                tr.begin("paged_sweep", request_track(sched.running[slot].uid))
             self._table_dev = _snapshot(self._table_h)
             ptree, self._score_dev = paged_sweep(
                 self.pool.tree(), self._score_dev, self._table_dev,
@@ -1204,7 +1476,12 @@ class ContinuousEngine(_SlotDecodeMixin):
                 self._slot_reserved[slot] += len(freed)
             self._cursor_h[slot] = self.capacity
             self._table_dev = _snapshot(self._table_h)
-            self.stats["decode_evict_sweeps"] += 1
+            if self._sync_timers:
+                jax.block_until_ready(self._score_dev)
+            if tr is not None:
+                tr.end("paged_sweep", request_track(sched.running[slot].uid),
+                       blocks_freed=len(freed))
+            self._m_sweeps.inc()
 
     def _on_retire(self, slot: int, req: Request) -> None:
         if not (self.capture_admission and self.pool is not None):
@@ -1290,6 +1567,12 @@ class ContinuousEngine(_SlotDecodeMixin):
         bit-identical — so the stall lands in ``max_gap_s``/``tpot_s``
         (see ``_admit``)."""
         r = sched.running[slot]
+        tr = self.trace
+        if tr is not None:
+            tid = request_track(r.uid)
+            tr.instant("preempt", tid, emitted=len(r.out_tokens))
+            tr.end("decode", tid)
+            tr.end("request", tid, outcome="preempted")
         sched.requeue(r)
         r.out_tokens = []  # rebuilt bit-identically by the re-serve
         r.preempt_emit_s = last_emit[slot]  # the stall starts here
@@ -1298,7 +1581,7 @@ class ContinuousEngine(_SlotDecodeMixin):
         self._free_slot_blocks(slot)
         active[slot] = False
         remaining[slot] = 0
-        self.stats["preemptions"] += 1
+        self._m_preemptions.inc()
 
     def _ensure_append_blocks(self, sched, active, remaining, last_emit,
                               steps: int) -> None:
@@ -1508,6 +1791,11 @@ class BucketedEngine(_SlotDecodeMixin):
         active = np.zeros(self.num_slots, bool)
         remaining = np.zeros(self.num_slots, np.int64)
         last_emit = np.zeros(self.num_slots, np.float64)
+        # deprecated engine, legacy dict stats.  ``decode_time_s`` is a
+        # host timer stamped after the np.asarray sync on the sampled
+        # tokens only — under JAX async dispatch it bounds execution
+        # loosely (dispatch + token materialization), unlike the chunked
+        # engine's sync_timers-gated metrics (repro.obs)
         self.stats = {"decode_chunks": 0, "decode_steps": 0,
                       "decode_time_s": 0.0, "decode_path": "dense"}
 

@@ -351,3 +351,9 @@ class KVBlockPool:
             # int32 pos + bool mask metadata, outside the K+V budget
             "metadata_bytes": int(self.pos.nbytes + self.mask.nbytes),
         }
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror ``stats()`` as ``kv_pool_*`` callback gauges on the
+        engine's registry (collection-time reads, no hot-path writes)."""
+        from repro.obs.metrics import bind_stat_gauges
+        bind_stat_gauges(registry, "kv_pool", self.stats)

@@ -506,3 +506,9 @@ class PrefixCache:
             "evictions": self.evictions,
             "tokens_hit": self.tokens_hit,
         }
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror ``stats()`` as ``prefix_cache_*`` callback gauges on the
+        engine's registry (collection-time reads, no hot-path writes)."""
+        from repro.obs.metrics import bind_stat_gauges
+        bind_stat_gauges(registry, "prefix_cache", self.stats)

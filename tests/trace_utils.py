@@ -54,24 +54,30 @@ def kept_sets(admission: dict) -> dict:
 
 def run_trace(cfg, params, lkv, *, policy, requests, chunk,
               prefix_cache: Optional[PrefixCache] = None, budget=8,
-              num_slots=2, **engine_kw):
+              num_slots=2, trace=None, drift=None, **engine_kw):
     """Serve a clone of ``requests``; returns ({uid: Request}, engine).
 
     By default ``max_context`` covers the whole trace so every request
     shares the engine's base KV-buffer rung — the standard-traffic
     configuration.  Pass ``max_context`` explicitly to exercise mixed
-    rungs (the cache then only serves same-rung snapshots)."""
+    rungs (the cache then only serves same-rung snapshots).  ``trace``
+    (an ``obs.trace.TraceRecorder``) and ``drift`` (an
+    ``obs.quality.DriftMonitor``) attach the observability layer — the
+    span-invariant tests in ``tests/test_obs.py`` ride this harness."""
     max_new = max(r.max_new_tokens for r in requests)
     max_len = max(len(r.prompt) for r in requests)
     # ``engine_kw`` still uses the historical kwarg names; route them
     # through the same mapping the deprecation shim uses, but hand the
-    # engine a ServingConfig (the supported API) — no warning emitted
+    # engine a ServingConfig (the supported API) — no warning emitted.
+    # The obs fields are not legacy kwargs, so they land via ``replace``.
     sc = ServingConfig.from_legacy(
         policy=policy, evict=EvictionConfig(budget=budget),
         num_slots=num_slots, chunk=chunk,
         max_context=engine_kw.pop("max_context", max_len),
         max_new_tokens=max_new, eos_id=-1, prefix_cache=prefix_cache,
         capture_admission=True, **engine_kw)
+    if trace is not None or drift is not None:
+        sc = sc.replace(trace=trace, drift=drift)
     eng = ContinuousEngine(
         params, cfg, sc,
         lkv_params=lkv if policy == "lookaheadkv" else None)
